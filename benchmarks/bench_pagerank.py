@@ -1,0 +1,36 @@
+"""Paper Table 5 / Fig. 8a-b analog: PageRank per-iteration runtime.
+
+CPU-scaled: R-MAT graphs (Graph500 parameters, as in §7) instead of Twitter;
+reports per-iteration time for the GRE Scatter-Combine engine, plus the
+engine throughput in edges/s (the cross-system comparison number)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core import algorithms
+from repro.core.engine import DevicePartition, GREEngine
+from repro.graph.generators import rmat_edges
+
+
+def run(scale: int = 14, edge_factor: int = 16, iters: int = 5):
+    g = rmat_edges(scale=scale, edge_factor=edge_factor, seed=0).dedup()
+    part = DevicePartition.from_graph(g)
+    eng = GREEngine(algorithms.pagerank_program())
+    state = eng.init_state(part)
+
+    step = jax.jit(lambda s: eng.superstep(part, s))
+    us = time_fn(step, state, iters=iters)
+    eps = g.num_edges / (us / 1e6)
+    emit(f"pagerank_iter_rmat{scale}", us,
+         f"V={g.num_vertices};E={g.num_edges};edges_per_s={eps:.3g}")
+    return us
+
+
+def main():
+    for scale in (12, 14):
+        run(scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 10 analog: weak scalability — runtime vs graph size.
+
+Graph500 R-MAT generator with fixed out-degree 16 (as in §7.1.2), CPU-scaled
+from 2^10 to 2^14 vertices; the paper's claim is close-to-linear runtime
+growth, checked via the derived column (us per edge stays ~flat)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core import algorithms
+from repro.core.engine import DevicePartition, GREEngine
+from repro.graph.generators import rmat_edges
+
+
+def main():
+    prev = None
+    for scale in (10, 11, 12, 13):
+        g = rmat_edges(scale=scale, edge_factor=16, seed=0,
+                       weights=True).dedup()
+        part = DevicePartition.from_graph(g)
+        eng = GREEngine(algorithms.pagerank_program())
+        step = jax.jit(lambda s: eng.superstep(part, s))
+        us = time_fn(step, eng.init_state(part), iters=3)
+        per_edge = us / g.num_edges
+        growth = "" if prev is None else f";growth={us / prev:.2f}x"
+        emit(f"weak_pagerank_rmat{scale}", us,
+             f"E={g.num_edges};us_per_edge={per_edge:.4f}{growth}")
+        prev = us
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run            # all
+  python -m benchmarks.run pagerank   # one
+
+Output: ``name,us_per_call,derived`` CSV on stdout.
+"""
+import sys
+
+from benchmarks import (bench_gas_vs_sc, bench_memory, bench_pagerank,
+                        bench_partition, bench_traversal, bench_weak)
+
+SUITES = {
+    "pagerank": bench_pagerank.main,     # Table 5 / Fig. 8a-b
+    "traversal": bench_traversal.main,   # Fig. 8c-d
+    "weak": bench_weak.main,             # Fig. 10
+    "partition": bench_partition.main,   # Fig. 11/12/13 + §5.1
+    "memory": bench_memory.main,         # §7.1.2 memory claim
+    "gas_vs_sc": bench_gas_vs_sc.main,   # §2.2 motivation
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        SUITES[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Continuous-batching LM serving: requests with different prompt lengths
+stream through a fixed 4-slot decode batch (no decode step waits for a
+prefill; static shapes — zero recompilation).
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import reduced_lm_config
+from repro.models import transformer as tfm
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+cfg, _ = get_config("smollm-135m")
+cfg = reduced_lm_config(cfg)
+params = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+
+rng = np.random.default_rng(0)
+sched = ContinuousBatcher(params, cfg, batch_slots=4, max_len=96)
+reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=plen)
+                .astype(np.int32), max_new=12)
+        for i, plen in enumerate([8, 25, 12, 40, 16, 31, 9, 22])]
+for r in reqs:
+    sched.submit(r)
+
+t0 = time.time()
+steps = 0
+while any(not r.done for r in reqs):
+    active = sched.step()
+    steps += 1
+    if steps % 5 == 0:
+        done = sum(r.done for r in reqs)
+        print(f"step {steps:3d}: {active} active slots, {done}/8 done")
+dt = time.time() - t0
+total = sum(len(r.out) for r in reqs)
+print(f"served 8 requests ({total} tokens) in {steps} scheduler steps, "
+      f"{dt:.1f}s ({total / dt:.1f} tok/s)")
+for r in reqs[:3]:
+    print(f"  req {r.uid} (prompt {len(r.prompt)}): {r.out[:6]}...")
+assert all(r.done and len(r.out) == 12 for r in reqs)

@@ -1,0 +1,59 @@
+"""Distributed SSSP + checkpoint/restart over the Agent-Graph exchange on
+8 simulated devices.
+
+    PYTHONPATH=src python examples/distributed_sssp.py
+
+Shows: greedy partitioning -> agent-graph build -> shard_map BSP execution
+-> paper-§6.3 snapshot (masters + bitmap only) -> restore and continue."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+
+from repro.checkpoint.manager import (CheckpointManager, graph_engine_restore,
+                                      graph_engine_snapshot)
+from repro.core import algorithms
+from repro.core.agent_graph import build_agent_graph
+from repro.core.dist_engine import DistGREEngine
+from repro.core.partition import greedy_partition, partition_quality
+from repro.graph.generators import rmat_edges
+
+g = rmat_edges(scale=11, edge_factor=16, seed=0, weights=True).dedup()
+k = 8
+part = greedy_partition(g, k, batch_size=256)
+q = partition_quality(g, part)
+print(f"|V|={g.num_vertices} |E|={g.num_edges} k={k} "
+      f"equiv-cut={q.equivalent_edge_cut:.3f} "
+      f"agent_comm={q.agent_comm} (vertex-cut would be {q.vertexcut_comm})")
+
+ag = build_agent_graph(g, part, k)
+mesh = jax.make_mesh((k,), ("graph",))
+eng = DistGREEngine(algorithms.sssp_program(), mesh, ("graph",),
+                    exchange="agent", overlap=True)
+
+# run 5 supersteps, snapshot, run to completion, then verify a restore
+state0 = eng.init_state(ag, source=0)
+topo = eng.device_topology(ag)
+run5 = eng.make_run(ag, max_steps=5)
+mid = run5(topo, state0)
+mgr = CheckpointManager("/tmp/gre_sssp_ckpt", async_write=False)
+mgr.save(int(mid.step[0]), graph_engine_snapshot(mid, ag.cap))
+print(f"snapshot at superstep {int(mid.step[0])} "
+      f"(masters+bitmap only, agents dropped)")
+
+snap, _ = mgr.restore(jax.tree.map(
+    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+    graph_engine_snapshot(mid, ag.cap)))
+resumed = graph_engine_restore(snap, ag.num_slots, identity=np.inf)
+final = eng.make_run(ag, max_steps=500)(topo, resumed)
+dist_resumed = np.asarray(final.vertex_data).reshape(-1)[ag.old2new]
+
+full = eng.make_run(ag, max_steps=500)(topo, state0)
+dist_full = np.asarray(full.vertex_data).reshape(-1)[ag.old2new]
+same = np.allclose(np.nan_to_num(dist_resumed, posinf=-1),
+                   np.nan_to_num(dist_full, posinf=-1))
+print(f"resumed run matches uninterrupted run: {same}")
+print(f"reached {np.isfinite(dist_full).sum()} / {g.num_vertices} vertices")
+assert same

@@ -1,0 +1,58 @@
+"""Full-batch GCN training on a synthetic Cora-like graph.
+
+    PYTHONPATH=src python examples/gnn_fullbatch.py
+
+The layer aggregation runs on the GRE scatter-combine primitive; labels are
+planted communities so accuracy is verifiable."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.gnn import (GraphBatch, compute_gcn_edge_norm, gnn_forward,
+                              gnn_loss, init_gnn)
+from repro.graph.generators import rmat_edges
+from repro.optim.adamw import AdamW
+
+cfg, _ = get_config("gcn-cora")
+rng = np.random.default_rng(0)
+
+# synthetic community graph: 7 planted clusters + noise edges
+V, C = 1400, cfg.n_classes
+labels = rng.integers(0, C, V)
+intra = [(u, v) for _ in range(V * 40)
+         for u, v in [rng.integers(0, V, 2)] if labels[u] == labels[v]]
+noise = [tuple(rng.integers(0, V, 2)) for _ in range(V // 2)]
+edges = np.array(intra + noise)
+src, dst = jnp.asarray(edges[:, 0], jnp.int32), jnp.asarray(edges[:, 1], jnp.int32)
+mask = jnp.ones(len(edges), bool)
+feats = jax.random.normal(jax.random.PRNGKey(0), (V, 64)) * 0.1
+feats = feats.at[jnp.arange(V), jnp.asarray(labels % 64)].add(1.0)  # weak signal
+train_mask = jnp.asarray(rng.random(V) < 0.5)
+
+batch = GraphBatch(feats, src, dst, mask, jnp.asarray(labels), train_mask,
+                   edge_norm=compute_gcn_edge_norm(src, dst, mask, V))
+params = init_gnn(jax.random.PRNGKey(1), cfg, 64, C)
+opt = AdamW(lr=5e-2, weight_decay=0.0)
+opt_state = opt.init(params)
+
+
+@jax.jit
+def step(p, o):
+    loss, g = jax.value_and_grad(gnn_loss)(p, batch, cfg)
+    p, o = opt.update(g, o, p)
+    return p, o, loss
+
+
+for it in range(250):
+    params, opt_state, loss = step(params, opt_state)
+    if it % 30 == 0:
+        print(f"iter {it:3d} loss {float(loss):.3f}")
+
+logits = gnn_forward(params, batch, cfg)
+pred = np.asarray(jnp.argmax(logits, -1))
+test = ~np.asarray(train_mask)
+acc = (pred[test] == labels[test]).mean()
+print(f"test accuracy on planted communities: {acc:.3f}")
+assert acc > 0.5, "GCN failed to learn planted structure"

@@ -1,0 +1,26 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py            # full run
+    PYTHONPATH=src python examples/train_lm.py --tiny     # CI-sized
+
+Uses the full framework path: config -> data pipeline -> AdamW ->
+checkpointing -> train loop (smollm-135m family; the --tiny flag shrinks
+width/depth for CPU)."""
+import argparse
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    argv = ["--arch", "smollm-135m", "--lr", "1e-2",
+            "--ckpt", "/tmp/gre_lm_ckpt", "--ckpt-every", "100"]
+    if args.tiny:
+        argv += ["--steps", "40", "--batch", "4", "--seq", "64"]
+    else:
+        argv += ["--steps", str(args.steps), "--batch", "16", "--seq", "256"]
+    loss = train.main(argv)
+    print(f"done; final loss {loss:.3f}")

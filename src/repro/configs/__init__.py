@@ -1,0 +1,54 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Tuple
+
+from repro.configs.base import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                                GNNConfig, GNNShape, LMConfig, LMShape,
+                                MoESpec, RecSysConfig, RecSysShape)
+
+_MODULES = {
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "dimenet": "repro.configs.dimenet",
+    "gcn-cora": "repro.configs.gcn_cora",
+    "gin-tu": "repro.configs.gin_tu",
+    "mace": "repro.configs.mace",
+    "autoint": "repro.configs.autoint",
+}
+
+ALL_ARCHS = tuple(_MODULES)
+
+_SHAPES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}
+
+
+def get_config(arch: str):
+    """Returns (config, family) for an architecture id."""
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.CONFIG, mod.FAMILY
+
+
+def get_shapes(arch: str):
+    """The arch's own input-shape set (assignment pairs shapes per family)."""
+    _, family = get_config(arch)
+    return _SHAPES[family]
+
+
+def get_shape(arch: str, shape_name: str):
+    for s in get_shapes(arch):
+        if s.name == shape_name:
+            return s
+    raise KeyError(f"{arch} has no shape {shape_name!r}")
+
+
+def all_cells():
+    """All 40 (arch × shape) dry-run cells."""
+    for arch in ALL_ARCHS:
+        for s in get_shapes(arch):
+            yield arch, s.name

@@ -1,0 +1,7 @@
+# GRE's primary contributions: the Scatter-Combine computation model and the
+# Agent-Graph distributed data model, plus the BSP engine that executes them.
+from repro.core.vertex_program import VertexProgram, Monoid, MONOIDS, segment_combine
+from repro.core.engine import GREEngine, EngineState, DevicePartition
+from repro.core.agent_graph import AgentGraph, build_agent_graph
+from repro.core.partition import greedy_partition, hash_partition, partition_quality
+from repro.core import algorithms

@@ -1,0 +1,205 @@
+"""Agent-Graph construction (paper §5.1).
+
+Given an edge partition P(e) and master placement owner(v), extends the
+directed graph with agent vertices:
+
+  combiner  v_c — lives on a partition holding in-edges of a remote master v;
+                  local messages ⊕-accumulate on v_c, then ONE message
+                  (v_c → v) crosses the network per superstep;
+  scatter   v_s — lives on a partition holding out-edges of a remote master;
+                  the master sends ONE message (v → v_s) per superstep and
+                  v_s fans out locally.
+
+Local slot layout per partition (paper §6.1.1 renumbering, masters first then
+agents, plus one padding sink for XLA static shapes):
+
+  [0, cap)                       masters (global ids relabeled contiguous)
+  [cap, cap+S_pad)               scatter agents
+  [cap+S_pad, cap+S_pad+C_pad)   combiners
+  cap+S_pad+C_pad                sink (padding target, never read)
+
+All per-partition arrays are stacked along a leading axis of size k so the
+distributed engine can hand row i to device i under `shard_map`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.partition import assign_owners, rebalance_owners
+from repro.graph.structures import Graph
+
+
+@dataclasses.dataclass
+class AgentGraph:
+    """Host-side stacked representation of k agent-graph partitions."""
+
+    k: int
+    num_vertices: int          # original |V|
+    cap: int                   # masters per partition (padded)
+    s_pad: int                 # scatter-agent slots per partition
+    c_pad: int                 # combiner slots per partition
+    e_pad: int                 # edge slots per partition
+    s_x_pad: int               # scatter-exchange slots per (i, j) peer pair
+    c_x_pad: int               # combine-exchange slots per (i, j) peer pair
+
+    # topology, stacked [k, ...]
+    src: np.ndarray            # [k, e_pad] local src slot
+    dst: np.ndarray            # [k, e_pad] local dst slot
+    edge_mask: np.ndarray      # [k, e_pad]
+    edge_props: Dict[str, np.ndarray]
+    out_degree: np.ndarray     # [k, cap] GLOBAL out-degree of each master
+
+    # vertex id bookkeeping
+    old2new: np.ndarray        # [V] -> global relabeled id (owner-contiguous)
+    new2old: np.ndarray        # [k*cap] -> original id or -1 (padding master)
+
+    # exchange metadata
+    comb_send_slot: np.ndarray    # [k, k, x_pad] on i: row j = combiner slots -> j
+    comb_recv_master: np.ndarray  # [k, k, x_pad] on j: row i = master slot for payload from i
+    scat_send_master: np.ndarray  # [k, k, x_pad] on j: row i = master slots to push to i
+    scat_recv_slot: np.ndarray    # [k, k, x_pad] on i: row j = scatter-agent slot for payload from j
+
+    num_scatter: np.ndarray    # [k] real scatter-agent counts
+    num_combiner: np.ndarray   # [k] real combiner counts
+    num_edges: np.ndarray      # [k] real edge counts
+
+    @property
+    def num_slots(self) -> int:
+        return self.cap + self.s_pad + self.c_pad + 1
+
+    @property
+    def sink(self) -> int:
+        return self.cap + self.s_pad + self.c_pad
+
+
+def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
+    out = np.full(n, fill, dtype=arr.dtype if arr.size else np.int64)
+    out[:arr.shape[0]] = arr
+    return out
+
+
+def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
+                      owner: Optional[np.ndarray] = None,
+                      pad_multiple: int = 8) -> AgentGraph:
+    V, E = graph.num_vertices, graph.num_edges
+    cap = -(-V // k)
+    cap = -(-cap // pad_multiple) * pad_multiple
+    if owner is None:
+        owner = assign_owners(graph, edge_part, k)
+    owner = rebalance_owners(owner, k, cap)
+
+    # contiguous relabeling: partition i owns global ids [i*cap, i*cap+n_i)
+    order = np.lexsort((np.arange(V), owner))
+    old2new = np.empty(V, dtype=np.int64)
+    new2old = np.full(k * cap, -1, dtype=np.int64)
+    offs = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(np.bincount(owner, minlength=k), out=offs[1:])
+    ranks = np.arange(V) - offs[owner[order]]
+    old2new[order] = owner[order] * cap + ranks
+    new2old[old2new] = np.arange(V)
+
+    src_g, dst_g = old2new[graph.src], old2new[graph.dst]
+    src_own, dst_own = owner[graph.src], owner[graph.dst]
+    glob_outdeg = graph.out_degree().astype(np.float32)
+
+    per = []  # per-partition dicts
+    for i in range(k):
+        sel = np.flatnonzero(edge_part == i)
+        s_g, d_g = src_g[sel], dst_g[sel]
+        s_rem = src_own[sel] != i
+        d_rem = dst_own[sel] != i
+        scat_ids = np.unique(s_g[s_rem])         # remote masters we scatter FROM
+        comb_ids = np.unique(d_g[d_rem])         # remote masters we combine FOR
+        per.append(dict(sel=sel, s_g=s_g, d_g=d_g, s_rem=s_rem, d_rem=d_rem,
+                        scat_ids=scat_ids, comb_ids=comb_ids))
+
+    s_pad = max(1, max(p["scat_ids"].shape[0] for p in per))
+    c_pad = max(1, max(p["comb_ids"].shape[0] for p in per))
+    e_pad = max(1, max(p["sel"].shape[0] for p in per))
+    s_pad = -(-s_pad // pad_multiple) * pad_multiple
+    c_pad = -(-c_pad // pad_multiple) * pad_multiple
+    e_pad = -(-e_pad // pad_multiple) * pad_multiple
+    sink = cap + s_pad + c_pad
+
+    src = np.full((k, e_pad), sink, dtype=np.int32)
+    dst = np.full((k, e_pad), sink, dtype=np.int32)
+    edge_mask = np.zeros((k, e_pad), dtype=bool)
+    eprops = {name: np.zeros((k, e_pad), dtype=v.dtype)
+              for name, v in graph.edge_props.items()}
+    out_degree = np.zeros((k, cap), dtype=np.float32)
+    num_scatter = np.zeros(k, dtype=np.int64)
+    num_combiner = np.zeros(k, dtype=np.int64)
+    num_edges = np.zeros(k, dtype=np.int64)
+
+    # per-pair exchange lists
+    comb_send = [[[] for _ in range(k)] for _ in range(k)]   # [i][j] combiner slots on i
+    comb_recv = [[[] for _ in range(k)] for _ in range(k)]   # [j][i] master slots on j
+    scat_send = [[[] for _ in range(k)] for _ in range(k)]   # [j][i] master slots on j
+    scat_recv = [[[] for _ in range(k)] for _ in range(k)]   # [i][j] agent slots on i
+
+    for i, p in enumerate(per):
+        n_e = p["sel"].shape[0]
+        num_edges[i] = n_e
+        num_scatter[i] = p["scat_ids"].shape[0]
+        num_combiner[i] = p["comb_ids"].shape[0]
+        # local slot translation for edge endpoints
+        s_loc = np.where(p["s_rem"],
+                         cap + np.searchsorted(p["scat_ids"], p["s_g"]),
+                         p["s_g"] - i * cap)
+        d_loc = np.where(p["d_rem"],
+                         cap + s_pad + np.searchsorted(p["comb_ids"], p["d_g"]),
+                         p["d_g"] - i * cap)
+        # sort local edges by destination slot (combine key)
+        eorder = np.argsort(d_loc, kind="stable")
+        src[i, :n_e] = s_loc[eorder]
+        dst[i, :n_e] = d_loc[eorder]
+        edge_mask[i, :n_e] = True
+        for name, v in graph.edge_props.items():
+            eprops[name][i, :n_e] = v[p["sel"]][eorder]
+        # master aux: global out-degree
+        own_old = new2old[i * cap:(i + 1) * cap]
+        valid = own_old >= 0
+        out_degree[i, valid] = glob_outdeg[own_old[valid]]
+        # exchange lists
+        for r, g in enumerate(p["comb_ids"]):
+            j = int(g // cap)
+            comb_send[i][j].append(cap + s_pad + r)
+            comb_recv[j][i].append(int(g - j * cap))
+        for r, g in enumerate(p["scat_ids"]):
+            j = int(g // cap)
+            scat_send[j][i].append(int(g - j * cap))
+            scat_recv[i][j].append(cap + r)
+
+    # The scatter/combiner loads are SKEWED (paper Fig. 12b/13b); sizing the
+    # two exchange buffers independently halves all_to_all bytes on fan-in
+    # or fan-out heavy graphs.
+    c_x_pad = max(1, max(len(comb_send[i][j]) for i in range(k)
+                         for j in range(k)))
+    s_x_pad = max(1, max(len(scat_send[i][j]) for i in range(k)
+                         for j in range(k)))
+    c_x_pad = -(-c_x_pad // pad_multiple) * pad_multiple
+    s_x_pad = -(-s_x_pad // pad_multiple) * pad_multiple
+
+    def stack(lists, fill, width):
+        out = np.full((k, k, width), fill, dtype=np.int32)
+        for a in range(k):
+            for b in range(k):
+                v = np.asarray(lists[a][b], dtype=np.int32)
+                out[a, b, :v.shape[0]] = v
+        return out
+
+    return AgentGraph(
+        k=k, num_vertices=V, cap=cap, s_pad=s_pad, c_pad=c_pad, e_pad=e_pad,
+        s_x_pad=s_x_pad, c_x_pad=c_x_pad,
+        src=src, dst=dst, edge_mask=edge_mask, edge_props=eprops,
+        out_degree=out_degree, old2new=old2new, new2old=new2old,
+        comb_send_slot=stack(comb_send, sink, c_x_pad),
+        comb_recv_master=stack(comb_recv, sink, c_x_pad),  # identity-safe
+        scat_send_master=stack(scat_send, 0, s_x_pad),
+        scat_recv_slot=stack(scat_recv, sink, s_x_pad),
+        num_scatter=num_scatter, num_combiner=num_combiner,
+        num_edges=num_edges,
+    )

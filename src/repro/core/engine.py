@@ -1,0 +1,205 @@
+"""GRE BSP engine: executes VertexPrograms in supersteps (paper Alg. 2).
+
+Single-shard engine.  Each superstep runs two phases:
+
+  scatter-combine — every scatter-active vertex emits active messages along
+      its out-edges; messages execute ⊕ at their destinations immediately
+      (one fused gather → message → segment-reduce, no edge-state storage);
+  apply — every vertex whose combine_data changed recomputes vertex_data and
+      decides whether to stay scatter-active (assert_to_halt).
+
+The distributed engine (`repro.core.dist_engine`) reuses `superstep` on each
+shard's local slots and inserts the Agent-Graph exchange in between.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vertex_program import VertexProgram, segment_combine
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DevicePartition:
+    """Static per-shard topology (column storage, local 32-bit ids).
+
+    `num_slots` = masters + agents + 1 padding sink; padded edges point at
+    the sink so combines on padding never touch real state (paper §6.1.1
+    renumbers masters first, then agents; the sink is our addition for XLA
+    static shapes).
+    """
+
+    src: jnp.ndarray            # [E_pad] int32 local source slot
+    dst: jnp.ndarray            # [E_pad] int32 local destination slot
+    edge_mask: jnp.ndarray      # [E_pad] bool, False on padding
+    num_masters: int = dataclasses.field(metadata=dict(static=True))
+    num_slots: int = dataclasses.field(metadata=dict(static=True))
+    edges_sorted_by_dst: bool = dataclasses.field(metadata=dict(static=True))
+    edge_props: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    aux: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def from_graph(graph, pad_to: Optional[int] = None, sort_by_dst: bool = True):
+        """Whole graph on one shard (no agents; slots = V + sink)."""
+        from repro.graph.structures import pad_edges, sort_edges_by_dst
+        src, dst, props = graph.src, graph.dst, dict(graph.edge_props)
+        if sort_by_dst:
+            src, dst, props, _ = sort_edges_by_dst(src, dst, props)
+        v = graph.num_vertices
+        e_pad = pad_to or graph.num_edges
+        psrc, pdst, mask = pad_edges(src, dst, e_pad, pad_vertex=v)
+        props = {k: np.pad(p, (0, e_pad - graph.num_edges)) for k, p in props.items()}
+        out_deg = graph.out_degree().astype(np.float32)
+        return DevicePartition(
+            src=jnp.asarray(psrc), dst=jnp.asarray(pdst),
+            edge_mask=jnp.asarray(mask), num_masters=v, num_slots=v + 1,
+            edges_sorted_by_dst=sort_by_dst,
+            edge_props={k: jnp.asarray(p) for k, p in props.items()},
+            aux={"out_degree": jnp.asarray(out_deg),
+                 "global_id": jnp.arange(v, dtype=jnp.float32)},
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    """Runtime vertex states (paper §6.1.3), flat column arrays per slot."""
+
+    vertex_data: jnp.ndarray     # [num_masters, ...]
+    scatter_data: jnp.ndarray    # [num_slots, ...] (agents hold forwarded copies)
+    active_scatter: jnp.ndarray  # [num_slots] bool
+    step: jnp.ndarray            # scalar int32 superstep counter
+
+
+class GREEngine:
+    """Drives a VertexProgram over one DevicePartition."""
+
+    def __init__(self, program: VertexProgram, use_pallas: bool = False,
+                 dense_frontier: Optional[bool] = None):
+        self.program = program
+        self.use_pallas = use_pallas
+        # Iterative programs (halts=False, e.g. PageRank) keep every vertex
+        # active (paper §4.1), so per-edge activity masks are pure overhead;
+        # dense mode skips them (the sink slot's scatter_data is pinned to
+        # the monoid identity so padded edges still contribute nothing).
+        self.dense_frontier = (dense_frontier if dense_frontier is not None
+                               else not program.halts)
+
+    # ------------------------------------------------------------------ init
+    def init_state(self, part: DevicePartition,
+                   source: Optional[int] = None) -> EngineState:
+        p = self.program
+        n, s = part.num_masters, part.num_slots
+        vertex_data = p.init_vertex_data(n, part.aux)
+        scatter_full = jnp.full((s,) + vertex_data.shape[1:],
+                                p.monoid.identity, p.msg_dtype)
+        scatter_data = scatter_full.at[:n].set(p.init_scatter_data(n, part.aux))
+        active = jnp.zeros(s, dtype=bool).at[:n].set(p.init_active(n, part.aux))
+        if source is not None:
+            vertex_data = vertex_data.at[source].set(0.0)
+            scatter_data = scatter_data.at[source].set(0.0)
+            active = jnp.zeros(s, dtype=bool).at[source].set(True)
+        return EngineState(vertex_data, scatter_data, active,
+                           jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------- scatter-combine
+    def scatter_combine(self, part: DevicePartition, state: EngineState,
+                        num_segments: Optional[int] = None) -> jnp.ndarray:
+        """Phase 1: active messages on all out-edges of active vertices.
+
+        Returns the ⊕-accumulated combine_data over `num_segments` slots
+        (defaults to all local slots; the distributed engine combines into
+        masters+combiners and exchanges afterwards).
+        """
+        p = self.program
+        eprop = (part.edge_props[p.needs_edge_prop]
+                 if p.needs_edge_prop else None)
+        gathered = jnp.take(state.scatter_data, part.src, axis=0,
+                            fill_value=p.monoid.identity)
+        msgs = p.scatter_msg(gathered, eprop)
+        if self.dense_frontier:
+            msgs = msgs.astype(p.msg_dtype)
+        else:
+            live = jnp.take(state.active_scatter, part.src, axis=0,
+                            fill_value=False) & part.edge_mask
+            live = live.reshape(live.shape + (1,) * (msgs.ndim - live.ndim))
+            msgs = jnp.where(live, msgs.astype(p.msg_dtype),
+                             p.monoid.identity)
+        return segment_combine(
+            msgs, part.dst, num_segments or part.num_slots, p.monoid,
+            indices_are_sorted=part.edges_sorted_by_dst,
+            use_pallas=self.use_pallas)
+
+    # ------------------------------------------------------------------ apply
+    def apply(self, part: DevicePartition, state: EngineState,
+              combined: jnp.ndarray) -> EngineState:
+        """Phase 2: fold combine_data into vertex_data; assert_to_halt."""
+        p = self.program
+        n = part.num_masters
+        combined_m = combined[:n]
+        act_apply = p.combine_activates(state.vertex_data, combined_m)
+        new_vd, new_sd, act_scatter = p.apply_fn(state.vertex_data,
+                                                 combined_m, part.aux)
+        bva = act_apply.reshape(act_apply.shape + (1,) * (new_vd.ndim - act_apply.ndim))
+        vertex_data = jnp.where(bva, new_vd, state.vertex_data)
+        bsa = act_apply.reshape(act_apply.shape + (1,) * (new_sd.ndim - act_apply.ndim))
+        scatter_data = state.scatter_data.at[:n].set(
+            jnp.where(bsa, new_sd.astype(p.msg_dtype),
+                      state.scatter_data[:n]))
+        if p.halts:  # traversal: only improved vertices scatter next round
+            next_active = act_apply & act_scatter
+        else:        # iterative: every master keeps scattering
+            next_active = act_scatter
+        active = jnp.zeros_like(state.active_scatter).at[:n].set(next_active)
+        return EngineState(vertex_data, scatter_data, active, state.step + 1)
+
+    def superstep(self, part: DevicePartition, state: EngineState) -> EngineState:
+        return self.apply(part, state, self.scatter_combine(part, state))
+
+    # -------------------------------------------------------------------- run
+    @partial(jax.jit, static_argnums=(0, 3))
+    def run(self, part: DevicePartition, state: EngineState,
+            max_steps: int = 100) -> EngineState:
+        """BSP loop: terminate when no vertex is scatter-active (paper §4.1)
+        or after `max_steps` supersteps."""
+
+        def cond(s):
+            return (s.step < max_steps) & jnp.any(s.active_scatter)
+
+        def body(s):
+            return self.superstep(part, s)
+
+        return jax.lax.while_loop(cond, body, state)
+
+    # ------------------------------------------------- GAS baseline (ablation)
+    def gas_superstep(self, part: DevicePartition, state: EngineState,
+                      edge_state: jnp.ndarray) -> tuple:
+        """Two-sided GAS emulation (paper §2.2 motivation, Fig. 2 left).
+
+        Phase S-1 scatter: materialize per-edge messages into `edge_state`
+        (the intermediate storage Scatter-Combine eliminates).  Phase S
+        gather: poll in-edges and reduce.  Used only by the GAS-vs-SC
+        ablation benchmark; numerically identical, strictly more memory
+        traffic (one extra [E] store + load).
+        """
+        p = self.program
+        eprop = (part.edge_props[p.needs_edge_prop]
+                 if p.needs_edge_prop else None)
+        gathered = jnp.take(state.scatter_data, part.src, axis=0,
+                            fill_value=p.monoid.identity)
+        msgs = p.scatter_msg(gathered, eprop)
+        live = jnp.take(state.active_scatter, part.src, axis=0,
+                        fill_value=False) & part.edge_mask
+        new_edge_state = jnp.where(live, msgs.astype(p.msg_dtype),
+                                   p.monoid.identity)
+        # --- super-step boundary: edge_state persists ---
+        combined = segment_combine(
+            new_edge_state, part.dst, part.num_slots, p.monoid,
+            indices_are_sorted=part.edges_sorted_by_dst)
+        return self.apply(part, state, combined), new_edge_state

@@ -1,0 +1,212 @@
+"""Streaming Agent-Graph partitioning (paper §5.2, Eq. 7-8).
+
+Host-side (numpy) graph ingress, as in the paper where partitioning happens
+in the loader.  Implements:
+
+  * `greedy_partition` — the paper's greedy heuristic Eq. 8: place edge
+    (u, v) on the partition maximizing src/dst affinity + load balance.
+    `batch_size=1` is the exact serial stream (GRE-S); larger batches give
+    the parallel-loader approximation (GRE-P / PowerGraph-oblivious, where
+    loaders don't exchange heuristic state mid-stream).
+  * `hash_partition` — the random-hash baseline (Pregel/GraphLab default).
+  * `assign_owners` — master placement (most-incident-edges heuristic) and
+    contiguous relabeling so each partition's masters form a dense block
+    (paper §6.1.1 local renumbering, adapted to uniform XLA shapes).
+  * `partition_quality` — agents/vertex, equivalent edge-cut, cut-factor,
+    and the PowerGraph vertex-cut replica metrics for comparison (§7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.graph.structures import Graph
+
+DELTA = 1.0  # paper: Δ = 1.0 in Eq. 8
+
+
+def hash_partition(graph: Graph, k: int, seed: int = 0) -> np.ndarray:
+    """Random vertex sharding: each vertex and its out-edges to one random
+    partition (paper §1 'hash-mapping')."""
+    rng = np.random.default_rng(seed)
+    vertex_part = rng.integers(0, k, size=graph.num_vertices)
+    return vertex_part[graph.src].astype(np.int32)
+
+
+def hash_edge_cut(graph: Graph, k: int, seed: int = 0) -> float:
+    """The paper's Fig. 11b red line: TRADITIONAL edge-cut rate of random
+    vertex sharding — fraction of edges whose endpoints land on different
+    partitions (≈ 1 − 1/k on any graph).  Agent-graph's equivalent edge-cut
+    is compared against this."""
+    rng = np.random.default_rng(seed)
+    vp = rng.integers(0, k, size=graph.num_vertices)
+    return float(np.mean(vp[graph.src] != vp[graph.dst]))
+
+
+def greedy_partition(graph: Graph, k: int, batch_size: int = 256,
+                     seed: int = 0, num_loaders: int = 1,
+                     sync_every: int = 0) -> np.ndarray:
+    """Greedy streaming edge placement, Eq. 8:
+
+      idx = argmax_i { f(u,i) + g(v,i) + (Max - Ne(i)) / (Δ + Max - Min) }
+
+    f(u,i)=1 iff partition i already has an edge with source u; g(v,i)
+    likewise for target v; the last term balances edge load.
+
+    Modes (paper §5.2):
+      num_loaders=1, batch_size=1      — exact serial stream (GRE-S);
+      num_loaders=1, batch_size>1      — batched approximation;
+      num_loaders>1, sync_every=0      — OBLIVIOUS: loaders never exchange
+                                         heuristic state (PowerGraph-P);
+      num_loaders>1, sync_every=N      — COORDINATED: loaders merge their
+                                         has_src/has_dst/load state every N
+                                         local batches (PowerGraph-S-like).
+    """
+    V, E = graph.num_vertices, graph.num_edges
+    part = np.zeros(E, dtype=np.int32)
+    # split the edge stream across loaders (contiguous ranges, as when each
+    # machine reads its own file chunk)
+    bounds = np.linspace(0, E, num_loaders + 1).astype(np.int64)
+    states = [dict(has_src=np.zeros((k, V), dtype=bool),
+                   has_dst=np.zeros((k, V), dtype=bool),
+                   ne=np.zeros(k, dtype=np.int64)) for _ in range(num_loaders)]
+    rngs = [np.random.default_rng(seed + i) for i in range(num_loaders)]
+    cursors = [int(bounds[i]) for i in range(num_loaders)]
+    n_batch = 0
+    active = True
+    while active:
+        active = False
+        for li in range(num_loaders):
+            lo, hi_bound = cursors[li], int(bounds[li + 1])
+            if lo >= hi_bound:
+                continue
+            active = True
+            hi = min(lo + batch_size, hi_bound)
+            st = states[li]
+            u = graph.src[lo:hi]
+            v = graph.dst[lo:hi]
+            f = st["has_src"][:, u].astype(np.float64)     # [k, b]
+            g = st["has_dst"][:, v].astype(np.float64)     # [k, b]
+            ne = st["ne"]
+            mx, mn = ne.max(), ne.min()
+            balance = (mx - ne) / (DELTA + mx - mn)        # [k]
+            score = f + g + balance[:, None]
+            score += rngs[li].random(score.shape) * 1e-9   # tiebreak
+            idx = np.argmax(score, axis=0).astype(np.int32)
+            part[lo:hi] = idx
+            st["has_src"][idx, u] = True
+            st["has_dst"][idx, v] = True
+            np.add.at(st["ne"], idx, 1)
+            cursors[li] = hi
+        n_batch += 1
+        if sync_every and num_loaders > 1 and n_batch % sync_every == 0:
+            # coordinated mode: merge heuristic state across loaders
+            hs = np.logical_or.reduce([s["has_src"] for s in states])
+            hd = np.logical_or.reduce([s["has_dst"] for s in states])
+            ne = np.sum([s["ne"] for s in states], axis=0) // num_loaders
+            for s in states:
+                s["has_src"], s["has_dst"] = hs.copy(), hd.copy()
+                s["ne"] = ne.copy()
+    return part
+
+
+def assign_owners(graph: Graph, edge_part: np.ndarray, k: int) -> np.ndarray:
+    """Master placement: each vertex is owned by the partition holding most
+    of its incident edges (ties → lowest id); isolated vertices hash."""
+    V = graph.num_vertices
+    counts = np.zeros((k, V), dtype=np.int64)
+    np.add.at(counts, (edge_part, graph.src), 1)
+    np.add.at(counts, (edge_part, graph.dst), 1)
+    owner = np.argmax(counts, axis=0).astype(np.int32)
+    isolated = counts.sum(axis=0) == 0
+    owner[isolated] = (np.arange(V)[isolated] % k).astype(np.int32)
+    return owner
+
+
+def rebalance_owners(owner: np.ndarray, k: int, cap: int) -> np.ndarray:
+    """Cap masters per partition at `cap` by moving overflow vertices to the
+    least-loaded partitions (keeps XLA shapes uniform)."""
+    owner = owner.copy()
+    counts = np.bincount(owner, minlength=k)
+    over = [i for i in range(k) if counts[i] > cap]
+    under = [i for i in range(k) if counts[i] < cap]
+    for i in over:
+        vs = np.flatnonzero(owner == i)[cap:]
+        for v in vs:
+            j = min(under, key=lambda x: counts[x])
+            owner[v] = j
+            counts[j] += 1
+            if counts[j] >= cap:
+                under.remove(j)
+        counts[i] = cap
+    return owner
+
+
+@dataclasses.dataclass
+class PartitionQuality:
+    k: int
+    num_vertices: int
+    num_edges: int
+    num_scatters: int
+    num_combiners: int
+    edge_balance: float            # max partition edges / mean (1+ε of Eq. 7)
+    agents_per_vertex: float       # cut-factor for Agent-Graph (Fig. 12b/13b)
+    equivalent_edge_cut: float     # agents / E (Fig. 11b)
+    scatter_rate: float            # scatters / (scatters + combiners) skew
+    vertexcut_replicas: int        # PowerGraph replicas R for same placement
+    vertexcut_cut_factor: float    # 2 * (R - V) / V (paper §7.2)
+    vertexcut_comm: int            # 2 * (R - V) messages per superstep
+    agent_comm: int                # |Vs| + |Vc| messages per superstep (§5.1)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def partition_quality(graph: Graph, edge_part: np.ndarray,
+                      owner: Optional[np.ndarray] = None,
+                      k: Optional[int] = None) -> PartitionQuality:
+    k = k or int(edge_part.max()) + 1
+    if owner is None:
+        owner = assign_owners(graph, edge_part, k)
+    V, E = graph.num_vertices, graph.num_edges
+
+    # scatter agents: (u, i) pairs where partition i has edges with source u
+    # but does not own u; combiners likewise for targets (paper §5.1 defs).
+    src_key = edge_part.astype(np.int64) * V + graph.src
+    dst_key = edge_part.astype(np.int64) * V + graph.dst
+    src_pairs = np.unique(src_key)
+    dst_pairs = np.unique(dst_key)
+    s_part, s_v = src_pairs // V, src_pairs % V
+    c_part, c_v = dst_pairs // V, dst_pairs % V
+    n_scatter = int(np.sum(owner[s_v] != s_part))
+    n_combiner = int(np.sum(owner[c_v] != c_part))
+
+    # PowerGraph vertex-cut replicas for the SAME edge placement: a replica
+    # of v exists on every partition touching v (master included in R).
+    all_pairs = np.unique(np.concatenate([src_pairs, dst_pairs]))
+    replicas = int(all_pairs.shape[0])
+    # partitions with no edge of a vertex but owning it still host the master
+    touched = np.zeros(V, dtype=bool)
+    touched_part_of_owner = np.zeros(V, dtype=bool)
+    av_part, av_v = all_pairs // V, all_pairs % V
+    touched[av_v] = True
+    touched_part_of_owner[av_v[av_part == owner[av_v]]] = True
+    replicas += int(np.sum(touched & ~touched_part_of_owner))
+    mirrors = replicas - int(np.sum(touched))
+
+    ne = np.bincount(edge_part, minlength=k).astype(np.float64)
+    agents = n_scatter + n_combiner
+    return PartitionQuality(
+        k=k, num_vertices=V, num_edges=E,
+        num_scatters=n_scatter, num_combiners=n_combiner,
+        edge_balance=float(ne.max() / max(ne.mean(), 1.0)),
+        agents_per_vertex=agents / V,
+        equivalent_edge_cut=agents / max(E, 1),
+        scatter_rate=n_scatter / max(agents, 1),
+        vertexcut_replicas=replicas,
+        vertexcut_cut_factor=2.0 * mirrors / V,
+        vertexcut_comm=2 * mirrors,
+        agent_comm=agents,
+    )

@@ -1,0 +1,111 @@
+"""Scatter-Combine abstraction (paper §4, Alg. 1).
+
+A `VertexProgram` instantiates the four primitives:
+
+  scatter(u, v, e)   — generates an active message `msg = s(u.scatter_data,
+                       e.state)` (here `scatter_msg`);
+  combine(msg)       — folds the message into the destination's combine_data
+                       with a commutative+associative generalized sum ⊕
+                       (here a `Monoid`), optionally activating apply;
+  apply(v)           — recomputes vertex_data from the accumulated sum and
+                       optionally re-activates scatter;
+  assert_to_halt(v)  — deactivates scatter (traversal algorithms) or keeps
+                       the vertex active (iterative algorithms).
+
+On TPU the data race the paper handles with vLock does not exist: the whole
+scatter-combine phase is one fused `gather → message → segment-reduce`
+dataflow op, race-free and deterministic by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """Commutative+associative generalized sum ⊕ with identity (paper §2.2)."""
+
+    name: str
+    identity: float
+    op: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+    def segment_reduce(self, msgs: jnp.ndarray, dst: jnp.ndarray,
+                       num_segments: int, indices_are_sorted: bool = False
+                       ) -> jnp.ndarray:
+        if self.name == "sum":
+            return jax.ops.segment_sum(msgs, dst, num_segments,
+                                       indices_are_sorted=indices_are_sorted)
+        if self.name == "min":
+            return jax.ops.segment_min(msgs, dst, num_segments,
+                                       indices_are_sorted=indices_are_sorted)
+        if self.name == "max":
+            return jax.ops.segment_max(msgs, dst, num_segments,
+                                       indices_are_sorted=indices_are_sorted)
+        raise ValueError(self.name)
+
+
+MONOIDS: Dict[str, Monoid] = {
+    "sum": Monoid("sum", 0.0, jnp.add),
+    "min": Monoid("min", jnp.inf, jnp.minimum),
+    "max": Monoid("max", -jnp.inf, jnp.maximum),
+}
+
+
+def segment_combine(msgs: jnp.ndarray, dst: jnp.ndarray, num_segments: int,
+                    monoid: Monoid, indices_are_sorted: bool = False,
+                    use_pallas: bool = False, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """One-sided combine of active messages at their destinations.
+
+    This is the Scatter-Combine hot path.  The XLA path lowers to a fused
+    scatter-reduce; the Pallas path (TPU target) tiles dst-sorted edges into
+    VMEM blocks and turns the irregular reduction into block-local one-hot
+    MXU matmuls (sum) or masked VPU reductions (min/max).
+    """
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.segment_combine(msgs, dst, num_segments,
+                                          monoid.name, interpret=interpret)
+    return monoid.segment_reduce(msgs, dst, num_segments, indices_are_sorted)
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """User-defined vertex computation in the Scatter-Combine model.
+
+    State layout follows paper §6.1.3 (flat column arrays indexed by local
+    vertex id):
+
+      vertex_data   — result state, owned by masters, updated by `apply`;
+      scatter_data  — the datum a vertex scatters, refreshed by `apply`
+                      (and, for scatter agents, by the master's message);
+      combine_data  — the ⊕ accumulator, reset after each apply.
+
+    `scatter_msg(src_scatter_data, edge_prop)` builds message payloads for a
+    batch of edges at once (the engine has already gathered source data).
+    `apply_fn(vertex_data, combined, aux)` returns
+    `(new_vertex_data, new_scatter_data, activate_scatter)`.
+    Init functions receive `(n, aux)` where aux holds static per-partition
+    columns such as `out_degree`.
+    """
+
+    name: str
+    monoid: Monoid
+    scatter_msg: Callable[[jnp.ndarray, Optional[jnp.ndarray]], jnp.ndarray]
+    apply_fn: Callable[[jnp.ndarray, jnp.ndarray, Any], tuple]
+    init_vertex_data: Callable[[int], jnp.ndarray]
+    init_scatter_data: Callable[[int], jnp.ndarray]
+    init_active: Callable[[int], jnp.ndarray]
+    # `combine_activates(old_vertex_data, combined) -> bool[V]`: whether the
+    # accumulated message actually changes the vertex (paper's
+    # `activate_apply`).  Vertices without any improving message skip apply.
+    combine_activates: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] = (
+        lambda old, combined: jnp.ones(old.shape[0], dtype=bool))
+    # Iterative programs (PageRank) keep scattering; traversal programs halt.
+    halts: bool = True
+    needs_edge_prop: Optional[str] = None
+    msg_dtype: Any = jnp.float32

@@ -1,0 +1,2 @@
+from repro.graph.structures import Graph, CSR, coo_to_csr, pad_edges
+from repro.graph.generators import rmat_edges, ring_graph, grid_graph, erdos_renyi_edges

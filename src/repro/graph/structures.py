@@ -1,0 +1,124 @@
+"""Graph topology containers.
+
+GRE (paper §6.1.1) stores each partition's topology in CSR with local 32-bit
+vertex ids; property data is column-oriented (flat arrays indexed by local
+id).  We keep the same layout: a `Graph` is COO edge arrays (src, dst) plus
+optional per-edge/per-vertex property columns; `CSR` is the
+retrieval-optimized form.  All arrays are numpy on the host (graph ingress is
+a host-side pass, as in the paper) and are converted to device arrays when a
+partition is handed to the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    """Directed property graph in COO form (host-side)."""
+
+    num_vertices: int
+    src: np.ndarray  # [E] int32/int64 source vertex ids
+    dst: np.ndarray  # [E] destination vertex ids
+    edge_props: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    vertex_props: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.src = np.asarray(self.src, dtype=np.int64)
+        self.dst = np.asarray(self.dst, dtype=np.int64)
+        assert self.src.shape == self.dst.shape
+        for k, v in self.edge_props.items():
+            assert len(v) == self.num_edges, f"edge prop {k} length mismatch"
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def out_degree(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.num_vertices).astype(np.int64)
+
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.num_vertices).astype(np.int64)
+
+    def reversed(self) -> "Graph":
+        """Transposed graph (paper §4.2: backward traversal for BC/SCC)."""
+        return Graph(self.num_vertices, self.dst.copy(), self.src.copy(),
+                     {k: v.copy() for k, v in self.edge_props.items()},
+                     {k: v.copy() for k, v in self.vertex_props.items()})
+
+    def as_undirected(self) -> "Graph":
+        """Each undirected edge becomes two directed edges (paper §2.1)."""
+        src = np.concatenate([self.src, self.dst])
+        dst = np.concatenate([self.dst, self.src])
+        props = {k: np.concatenate([v, v]) for k, v in self.edge_props.items()}
+        return Graph(self.num_vertices, src, dst, props, dict(self.vertex_props))
+
+    def dedup(self) -> "Graph":
+        """Drop duplicate (src, dst) pairs and self loops."""
+        keep = self.src != self.dst
+        key = self.src[keep] * np.int64(self.num_vertices) + self.dst[keep]
+        _, idx = np.unique(key, return_index=True)
+        sel = np.flatnonzero(keep)[idx]
+        props = {k: v[sel] for k, v in self.edge_props.items()}
+        return Graph(self.num_vertices, self.src[sel], self.dst[sel], props,
+                     dict(self.vertex_props))
+
+
+@dataclasses.dataclass
+class CSR:
+    """Compressed sparse row adjacency: dst-sorted or src-sorted edge list."""
+
+    num_vertices: int
+    indptr: np.ndarray   # [V+1]
+    indices: np.ndarray  # [E] neighbor ids
+    edge_ids: np.ndarray  # [E] position of each CSR slot in the original COO
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+
+def coo_to_csr(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+               by: str = "src") -> CSR:
+    """Build CSR sorted by `src` (out-adjacency) or `dst` (in-adjacency)."""
+    key, other = (src, dst) if by == "src" else (dst, src)
+    order = np.argsort(key, kind="stable")
+    counts = np.bincount(key, minlength=num_vertices)
+    indptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSR(num_vertices, indptr, other[order].astype(np.int64), order.astype(np.int64))
+
+
+def pad_edges(src: np.ndarray, dst: np.ndarray, target: int,
+              pad_vertex: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad COO edge arrays to a static length for XLA.
+
+    Padded slots point `pad_vertex -> pad_vertex` and are masked out via the
+    returned validity mask.  `pad_vertex` is typically a dedicated sink slot
+    (== num_local_slots) so that combines on padding never touch real state.
+    """
+    e = src.shape[0]
+    assert target >= e, (target, e)
+    mask = np.zeros(target, dtype=bool)
+    mask[:e] = True
+    ps = np.full(target, pad_vertex, dtype=np.int32)
+    pd = np.full(target, pad_vertex, dtype=np.int32)
+    ps[:e] = src
+    pd[:e] = dst
+    return ps, pd, mask
+
+
+def sort_edges_by_dst(src: np.ndarray, dst: np.ndarray,
+                      edge_props: Optional[Dict[str, np.ndarray]] = None):
+    """Sort COO edges by destination (the combine key).
+
+    The Scatter-Combine hot loop segment-reduces messages by destination;
+    dst-sorted order makes the reduction a contiguous segmented scan, which is
+    what both the XLA path (`segment_sum` with `indices_are_sorted=True`) and
+    the Pallas kernel (block-local one-hot matmul) exploit.
+    """
+    order = np.argsort(dst, kind="stable")
+    props = {k: v[order] for k, v in (edge_props or {}).items()}
+    return src[order], dst[order], props, order

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the Scatter-Combine hot paths:
+#   segment_combine  — the paper's active-message combine (⊕ over dst-sorted
+#                      edges) as block-local one-hot MXU matmuls;
+#   flash_attention  — blocked online-softmax attention for the LM archs.
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_combine_ref(msgs: jnp.ndarray, dst: jnp.ndarray,
+                        num_segments: int, op: str = "sum") -> jnp.ndarray:
+    """msgs [E, D], dst [E] -> [num_segments, D]."""
+    if op == "sum":
+        return jax.ops.segment_sum(msgs, dst, num_segments)
+    if op == "min":
+        return jax.ops.segment_min(msgs, dst, num_segments)
+    if op == "max":
+        return jax.ops.segment_max(msgs, dst, num_segments)
+    raise ValueError(op)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """q [BH, Sq, D], k/v [BH, Sk, D]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / np.sqrt(d)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v)
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      bag_ids: jnp.ndarray, num_bags: int,
+                      weights=None) -> jnp.ndarray:
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, bag_ids, num_bags)

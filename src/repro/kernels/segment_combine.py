@@ -1,0 +1,131 @@
+"""Pallas TPU kernel for the Scatter-Combine ⊕ (paper §4's combine).
+
+TPU adaptation of the paper's active-message combine: instead of per-message
+atomic updates behind vLock (CPU), the irregular scatter becomes **block-local
+one-hot matmuls on the MXU** over dst-sorted edges:
+
+  * edges are sorted by destination (done once at graph ingress, like the
+    paper's CSR build, §6.1.1);
+  * the grid is (dst-row blocks × edge blocks); an SMEM prefetch table maps
+    each dst block to the edge blocks whose dst range intersects it, so empty
+    intersections are never visited (the CSR row-index analogue);
+  * each visit computes onehotᵀ @ msgs (sum ⊕, MXU-aligned [BE, BV] × [BE, D])
+    or a masked VPU reduction (min/max ⊕) and accumulates into the VMEM
+    output block.
+
+VMEM working set per step: BE·D (messages) + BE (ids) + BV·D (out block).
+Defaults BE=256, BV=256, D ≤ 512 keep this well under 16 MB VMEM and the
+matmul dims multiples of the 128-lane MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_OP_IDENTITY = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+def _kernel(table_ref, dst_ref, msgs_ref, out_ref, *, op: str, block_v: int,
+            n_edge_blocks: int):
+    iv = pl.program_id(0)
+    jj = pl.program_id(1)
+
+    @pl.when(jj == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _OP_IDENTITY[op])
+
+    eb = table_ref[iv, jj]  # real edge-block id or n_edge_blocks (padding)
+
+    @pl.when(eb < n_edge_blocks)
+    def _accumulate():
+        v0 = iv * block_v
+        dst = dst_ref[...]                                  # [BE]
+        msgs = msgs_ref[...]                                # [BE, D]
+        local = dst - v0
+        onehot = (local[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (dst.shape[0], block_v), 1))         # [BE, BV]
+        if op == "sum":
+            acc = jax.lax.dot_general(
+                onehot.astype(msgs.dtype), msgs,
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)          # [BV, D] on MXU
+            out_ref[...] += acc.astype(out_ref.dtype)
+        else:
+            ident = _OP_IDENTITY[op]
+            expanded = jnp.where(onehot[:, :, None], msgs[:, None, :], ident)
+            red = expanded.min(0) if op == "min" else expanded.max(0)
+            cur = out_ref[...]
+            out_ref[...] = (jnp.minimum(cur, red) if op == "min"
+                            else jnp.maximum(cur, red))
+
+
+def build_block_table(dst_sorted: np.ndarray, num_segments: int,
+                      block_e: int, block_v: int) -> np.ndarray:
+    """Host-side ingress step: for each dst block, the list of edge blocks
+    whose (sorted) dst range intersects it, padded with n_edge_blocks."""
+    e = dst_sorted.shape[0]
+    n_e = -(-e // block_e)
+    n_v = -(-num_segments // block_v)
+    pad = n_e * block_e - e
+    d = np.concatenate([dst_sorted, np.full(pad, 2**31 - 1, dst_sorted.dtype)])
+    first = d.reshape(n_e, block_e).min(axis=1)
+    last = d.reshape(n_e, block_e).max(axis=1)
+    # padded tail edges carry sentinel dst; clip to real values present
+    last = np.minimum(last, num_segments * 2)
+    rows = []
+    for i in range(n_v):
+        lo, hi = i * block_v, (i + 1) * block_v
+        hits = np.flatnonzero((last >= lo) & (first < hi))
+        rows.append(hits)
+    width = max(1, max(len(r) for r in rows))
+    table = np.full((n_v, width), n_e, np.int32)
+    for i, r in enumerate(rows):
+        table[i, :len(r)] = r
+    return table
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "block_e",
+                                             "block_v", "interpret"))
+def segment_combine_pallas(msgs: jnp.ndarray, dst: jnp.ndarray,
+                           table: jnp.ndarray, num_segments: int,
+                           op: str = "sum", block_e: int = 256,
+                           block_v: int = 256, interpret: bool = True
+                           ) -> jnp.ndarray:
+    """msgs [E, D] (dst-sorted), dst [E] int32, table from build_block_table.
+    Returns [num_segments, D]."""
+    e, d_feat = msgs.shape
+    n_e = -(-e // block_e)
+    n_v = -(-num_segments // block_v)
+    v_pad = n_v * block_v
+    e_pad = n_e * block_e
+    # pad edges with an out-of-range dst so their one-hot rows are all-zero
+    msgs = jnp.pad(msgs, ((0, e_pad - e), (0, 0)))
+    dst = jnp.pad(dst.astype(jnp.int32), (0, e_pad - e),
+                  constant_values=jnp.int32(2**31 - 1))
+    # append one dummy zero edge block for padded table entries
+    msgs = jnp.concatenate([msgs, jnp.zeros((block_e, d_feat), msgs.dtype)])
+    dst = jnp.concatenate([dst, jnp.full((block_e,), 2**31 - 1, jnp.int32)])
+
+    width = table.shape[1]
+    grid = (n_v, width)
+    out = pl.pallas_call(
+        functools.partial(_kernel, op=op, block_v=block_v, n_edge_blocks=n_e),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_e,), lambda i, j, t: (t[i, j],)),
+                pl.BlockSpec((block_e, d_feat), lambda i, j, t: (t[i, j], 0)),
+            ],
+            out_specs=pl.BlockSpec((block_v, d_feat), lambda i, j, t: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((v_pad, d_feat), jnp.float32),
+        interpret=interpret,
+    )(table, dst, msgs)
+    return out[:num_segments]

@@ -1,0 +1,81 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.aggregate results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def load(outdir: str, mesh: str = "single"):
+    recs = []
+    for f in sorted(Path(outdir).glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def fmt_row(r):
+    rl = r["roofline"]
+    meta = r.get("meta", {})
+    n_dev = r.get("n_devices", 256)
+    model_flops = meta.get("model_flops", 0.0)
+    hlo_flops_total = rl["flops_per_device"] * n_dev
+    ratio = model_flops / hlo_flops_total if hlo_flops_total else 0.0
+    bound = rl["bound_time_s"]
+    # roofline fraction: useful-compute time / bound time
+    ideal_compute = model_flops / (n_dev * PEAK_FLOPS)
+    frac = ideal_compute / bound if bound else 0.0
+    mem = r.get("memory", {}).get("peak_per_device_gib", float("nan"))
+    return {
+        "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
+        "compute_s": rl["compute_time_s"],
+        "memory_s": rl.get("memory_time_fused_s", rl["memory_time_s"]),
+        "memory_raw_s": rl["memory_time_s"],
+        "coll_s": rl["collective_time_s"], "dominant": rl["dominant"],
+        "model_flops": model_flops, "hlo_ratio": ratio,
+        "roofline_frac": frac, "mem_gib": mem,
+        "n_coll": rl.get("n_collectives", 0),
+    }
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | kind | compute (s) | memory fused (s) | raw (s) "
+           "| collective (s) | dominant | MODEL_FLOPS | MODEL/HLO "
+           "| roofline frac | mem GiB/dev |")
+    sep = "|" + "---|" * 12
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['memory_raw_s']:.3e} "
+            f"| {r['coll_s']:.3e} | **{r['dominant']}** "
+            f"| {r['model_flops']:.2e} | {r['hlo_ratio']:.2f} "
+            f"| {r['roofline_frac']:.4f} | {r['mem_gib']} |")
+    return "\n".join(out)
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    rows = [fmt_row(r) for r in load(outdir, mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(markdown_table(rows))
+    print(f"\n{len(rows)} cells ({mesh} mesh)")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_frac"] or 1)
+        collb = max(rows, key=lambda r: r["coll_s"])
+        print(f"worst roofline fraction: {worst['arch']} × {worst['shape']} "
+              f"({worst['roofline_frac']:.4f})")
+        print(f"most collective-bound: {collb['arch']} × {collb['shape']} "
+              f"({collb['coll_s']:.3e}s)")
+
+
+if __name__ == "__main__":
+    main()

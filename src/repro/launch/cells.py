@@ -1,0 +1,668 @@
+"""Dry-run cell construction: one Cell per (architecture × input shape).
+
+A Cell bundles the jittable step function, fully-abstract inputs
+(ShapeDtypeStructs with NamedShardings — never allocated), explicit output
+shardings, and analytic MODEL_FLOPS metadata for the roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import (GNNConfig, GNNShape, LMConfig, LMShape,
+                                RecSysConfig, RecSysShape)
+from repro.dist import sharding as shd
+from repro.launch.mesh import mesh_axes
+from repro.models import transformer as tfm
+from repro.models.autoint import autoint_loss, autoint_logits, retrieval_scores
+from repro.models.gnn import GraphBatch, gnn_forward, gnn_loss, init_gnn, propagate_sharded
+from repro.models.dimenet import dimenet_forward, init_dimenet
+from repro.models.mace import init_mace, mace_forward
+from repro.models.autoint import init_autoint
+from repro.nn.embedding import sharded_embedding_lookup
+from repro.optim.adamw import AdamW
+
+R8 = lambda x: max(8, int(-(-x // 8) * 8))
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    abstract_args: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _abstract(tree, mesh, specs):
+    return shd.abstract_with_sharding(tree, mesh, specs)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_ns(mesh, spec))
+
+
+# ====================================================================== LM
+def _lm_cell(arch: str, cfg: LMConfig, shape: LMShape, mesh: Mesh) -> Cell:
+    ax = mesh_axes(mesh)
+    dp, tp = ax["dp"], ax["tp"]
+    ctx = tfm.DistCtx(mesh=mesh, dp=dp, tp=tp)
+    pspecs = shd.lm_param_specs(cfg, dp, tp)
+    params_abs = _abstract(tfm.abstract_params(cfg), mesh, pspecs)
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt = AdamW(lr=3e-4)
+        ospecs = shd.opt_specs(pspecs)
+        opt_abs = _abstract(jax.eval_shape(opt.init, params_abs), mesh, ospecs)
+        bspecs = shd.lm_batch_specs(dp)
+        batch_abs = {
+            "tokens": _sds((B, S), jnp.int32, mesh, bspecs["tokens"]),
+            "labels": _sds((B, S), jnp.int32, mesh, bspecs["labels"]),
+        }
+
+        def train_step(params, opt_state, batch):
+            (loss, parts), grads = jax.value_and_grad(
+                tfm.lm_loss, has_aux=True)(params, batch, cfg, ctx)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss, **parts}
+
+        out_sh = (shd.to_shardings(mesh, pspecs),
+                  jax.tree.map(lambda s: _ns(mesh, s), ospecs),
+                  {"loss": _ns(mesh, P()), "ce": _ns(mesh, P()),
+                   "moe_aux": _ns(mesh, P())})
+        return Cell(arch, shape.name, "train", train_step,
+                    (params_abs, opt_abs, batch_abs), out_sh,
+                    {"model_flops": 6.0 * n_active * B * S,
+                     "tokens": B * S, "params": cfg.param_count(),
+                     "active_params": n_active,
+                     "scan_lengths": _lm_trips(cfg, S)},
+                    donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        tok_abs = _sds((B, S), jnp.int32, mesh, P(shd.dp_entry(dp), None))
+        cspecs = shd.lm_cache_specs(cfg, B, dp, tp, ax["dp_size"])
+
+        def prefill_step(params, tokens):
+            return tfm.prefill(params, tokens, cfg, ctx)
+
+        out_sh = (_ns(mesh, P(shd.dp_entry(dp), tp)),
+                  jax.tree.map(lambda s: _ns(mesh, s), cspecs))
+        return Cell(arch, shape.name, "prefill", prefill_step,
+                    (params_abs, tok_abs), out_sh,
+                    {"model_flops": 2.0 * n_active * B * S,
+                     "tokens": B * S, "params": cfg.param_count(),
+                     "active_params": n_active,
+                     "scan_lengths": _lm_trips(cfg, S)})
+
+    # decode (decode_32k / long_500k): one new token against a seq_len cache
+    cspecs = shd.lm_cache_specs(cfg, B, dp, tp, ax["dp_size"])
+    cache_abs = {
+        "k": _sds((cfg.n_layers, B, S, cfg.n_kv, cfg.d_head),
+                  cfg.param_dtype, mesh, cspecs["k"]),
+        "v": _sds((cfg.n_layers, B, S, cfg.n_kv, cfg.d_head),
+                  cfg.param_dtype, mesh, cspecs["v"]),
+        "len": _sds((B,), jnp.int32, mesh, cspecs["len"]),
+    }
+    tok_abs = _sds((B,), jnp.int32, mesh,
+                   P(shd.dp_entry(dp)) if B >= ax["dp_size"] else P())
+
+    def decode(params, cache, token):
+        return tfm.decode_step(params, cache, token, cfg, ctx)
+
+    out_sh = (_ns(mesh, P(shd.dp_entry(dp) if B >= ax["dp_size"] else None,
+                          tp)),
+              jax.tree.map(lambda s: _ns(mesh, s), cspecs))
+    kv_bytes = (2 * cfg.n_layers * B * S * cfg.n_kv * cfg.d_head
+                * jnp.dtype(cfg.param_dtype).itemsize)
+    return Cell(arch, shape.name, "decode", decode,
+                (params_abs, cache_abs, tok_abs), out_sh,
+                {"model_flops": 2.0 * n_active * B +
+                                4.0 * B * cfg.n_layers * cfg.n_heads
+                                * cfg.d_head * S,
+                 "tokens": B, "params": cfg.param_count(),
+                 "active_params": n_active, "kv_bytes": float(kv_bytes),
+                 "scan_lengths": {"layers": cfg.n_layers}},
+                donate_argnums=(1,))
+
+
+def _lm_trips(cfg: LMConfig, S: int) -> Dict[str, int]:
+    """Static trip counts of every scan in the LM step (roofline hints)."""
+    trips = {}
+    if cfg.remat and cfg.n_layers % cfg.remat_block == 0 and cfg.remat_block > 1:
+        trips["outer"] = cfg.n_layers // cfg.remat_block
+        trips["inner"] = cfg.remat_block
+    else:
+        trips["layers"] = cfg.n_layers
+    if cfg.attention_impl == "chunked":
+        trips["q_chunks"] = max(1, min(S, -(-S // cfg.q_chunk)))
+        trips["kv_chunks"] = max(1, -(-S // cfg.kv_chunk))
+    return trips
+
+
+# ====================================================================== GNN
+def _agent_shape_estimates(V: int, E: int, K: int,
+                           scatter_rate: float = 0.5) -> Dict[str, int]:
+    """Static Agent-Graph partition shapes for the dry-run (no real graph is
+    built at 10⁶+ scale on this host; stats follow the measured agent rates
+    of the greedy partitioner — agents/vertex ≈ 2-4 on scale-free graphs;
+    `scatter_rate` encodes the Fig. 12b scatter/combiner skew so the two
+    exchange buffers are sized independently)."""
+    cap = R8(-(-V // K))
+    e_pad = R8(int(E / K * 1.25))
+    agents = min(V - 1, 6 * cap)
+    s_pad = R8(max(8, int(agents * max(scatter_rate, 0.1) * 1.25)))
+    c_pad = R8(max(8, int(agents * max(1 - scatter_rate, 0.1) * 1.25)))
+    s_x_pad = R8(max(8, (2 * s_pad) // K))
+    c_x_pad = R8(max(8, (2 * c_pad) // K))
+    return dict(cap=cap, e_pad=e_pad, s_pad=s_pad, c_pad=c_pad,
+                s_x_pad=s_x_pad, c_x_pad=c_x_pad)
+
+
+def _abstract_topo(est: Dict[str, int], K: int, mesh: Mesh, spec,
+                   with_weight: bool = False):
+    """ShapeDtypeStruct ShardTopology (stacked [K, ...]) for the dry run."""
+    from repro.core.dist_engine import ShardTopology
+    from repro.core.engine import DevicePartition
+    cap, e_pad, s_pad, c_pad = (est["cap"], est["e_pad"], est["s_pad"],
+                                est["c_pad"])
+    s_x, c_x = est["s_x_pad"], est["c_x_pad"]
+    slots = cap + s_pad + c_pad + 1
+    f = lambda shape, dt: _sds(shape, dt, mesh, spec)
+    part = DevicePartition(
+        src=f((K, e_pad), jnp.int32), dst=f((K, e_pad), jnp.int32),
+        edge_mask=f((K, e_pad), jnp.bool_), num_masters=cap,
+        num_slots=slots, edges_sorted_by_dst=True,
+        edge_props=({"weight": f((K, e_pad), jnp.float32)} if with_weight
+                    else {}),
+        aux={"out_degree": f((K, cap), jnp.float32),
+             "global_id": f((K, cap), jnp.float32)},
+    )
+    return ShardTopology(
+        part=part,
+        comb_send_slot=f((K, K, c_x), jnp.int32),
+        comb_recv_master=f((K, K, c_x), jnp.int32),
+        scat_send_master=f((K, K, s_x), jnp.int32),
+        scat_recv_slot=f((K, K, s_x), jnp.int32),
+    )
+
+
+def _gnn_flops(cfg: GNNConfig, V: int, E: int, d_in: int, T: int = 0) -> float:
+    ch = cfg.d_hidden
+    if cfg.family == "gcn":
+        return 2.0 * (E * d_in + V * d_in * ch) + \
+               2.0 * (cfg.n_layers - 1) * (E * ch + V * ch * ch)
+    if cfg.family == "gin":
+        f = 2.0 * (E * d_in + V * (d_in * ch + ch * ch))
+        f += (cfg.n_layers - 1) * 2.0 * (E * ch + 2 * V * ch * ch)
+        return f
+    if cfg.family == "dimenet":
+        per_block = 2.0 * T * ch * cfg.n_bilinear + 8.0 * E * ch * ch
+        return cfg.n_layers * per_block + 4.0 * E * ch * cfg.n_radial
+    if cfg.family == "mace":
+        n_paths = 15  # valid (l1,l2,l3) for l_max=2
+        per_layer = 2.0 * n_paths * E * ch * 27 + 6.0 * V * ch * ch \
+                    + 2.0 * n_paths * V * ch * 27 * 2
+        return cfg.n_layers * per_layer
+    raise ValueError(cfg.family)
+
+
+def _gnn_fullgraph_agent_cell(arch, cfg: GNNConfig, shape: GNNShape,
+                              mesh: Mesh) -> Cell:
+    """GCN/GIN full-graph training through the Agent-Graph exchange."""
+    ax = mesh_axes(mesh)
+    K = ax["n_devices"]
+    axes = ax["all"]
+    spec = P(axes)
+    est = _agent_shape_estimates(shape.n_nodes, shape.n_edges, K)
+    cap, slots = est["cap"], est["cap"] + est["s_pad"] + est["c_pad"] + 1
+    d_in, n_out = shape.d_feat, cfg.n_classes
+    topo_abs = _abstract_topo(est, K, mesh, spec)
+    feats_abs = _sds((K, slots, d_in), jnp.float32, mesh, spec)
+    norm_abs = _sds((K, est["e_pad"]), jnp.float32, mesh, spec)
+    labels_abs = _sds((K, cap), jnp.int32, mesh, spec)
+    mask_abs = _sds((K, cap), jnp.bool_, mesh, spec)
+    params_abs = jax.eval_shape(
+        lambda k: init_gnn(k, cfg, d_in, n_out),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    params_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())), params_abs)
+    opt = AdamW(lr=1e-2)
+    opt_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())),
+        jax.eval_shape(opt.init, params_abs))
+
+    def loss_fn(params, topo, feats, norm, labels, mask):
+        def shard_loss(topo_s, feats_s, norm_s, labels_s, mask_s):
+            sq = lambda t: jax.tree.map(lambda a: a[0], t)
+            topo_l, h, nrm = sq(topo_s), feats_s[0], norm_s[0]
+            lab, msk = labels_s[0], mask_s[0]
+
+            def prop(hh, ew):
+                full = jnp.zeros((slots, hh.shape[-1]), hh.dtype
+                                 ).at[:hh.shape[0]].set(hh)
+                out = propagate_sharded(full, topo_l, axes,
+                                        ew if ew is not None else None)
+                return out[:hh.shape[0]]
+
+            b = GraphBatch(h, topo_l.part.src, topo_l.part.dst,
+                           topo_l.part.edge_mask, lab, msk, edge_norm=nrm)
+            # propagate over ALL slots; gnn_forward works on [slots, F]
+            logits = gnn_forward(params, b, cfg, prop_fn=prop)
+            logp = jax.nn.log_softmax(logits[:cap].astype(jnp.float32), -1)
+            ll = jnp.take_along_axis(logp, lab[:, None], axis=-1)[:, 0]
+            msk_f = msk.astype(jnp.float32)
+            num = jax.lax.psum((ll * msk_f).sum(), axes)
+            den = jax.lax.psum(msk_f.sum(), axes)
+            return (-num / jnp.maximum(den, 1.0))[None]
+
+        loss = jax.shard_map(
+            shard_loss, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: spec, topo,
+                                   is_leaf=lambda x: hasattr(x, "ndim")),
+                      spec, spec, spec, spec),
+            out_specs=P(axes[0] if len(axes) == 1 else axes),
+            check_vma=False)(topo, feats, norm, labels, mask)
+        return loss.mean()
+
+    def train_step(params, opt_state, topo, feats, norm, labels, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(params, topo, feats, norm,
+                                                  labels, mask)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    out_sh = (jax.tree.map(lambda a: a.sharding, params_abs),
+              jax.tree.map(lambda a: a.sharding, opt_abs),
+              _ns(mesh, P()))
+    return Cell(arch, shape.name, "train", train_step,
+                (params_abs, opt_abs, topo_abs, feats_abs, norm_abs,
+                 labels_abs, mask_abs), out_sh,
+                {"model_flops": 3.0 * _gnn_flops(cfg, shape.n_nodes,
+                                                 shape.n_edges, d_in),
+                 "nodes": shape.n_nodes, "edges": shape.n_edges,
+                 "agent_est": est, "exchange": "agent"},
+                donate_argnums=(0, 1))
+
+
+def _gnn_fullgraph_spmd_cell(arch, cfg: GNNConfig, shape: GNNShape,
+                             mesh: Mesh) -> Cell:
+    """DimeNet/MACE full-graph: GSPMD-sharded node/edge/triplet arrays
+    (molecular models need positions; features are synthesized as 3D coords
+    + species)."""
+    ax = mesh_axes(mesh)
+    axes = ax["all"]
+    sp1 = P(axes)
+    V, E = shape.n_nodes, shape.n_edges
+    R512 = lambda x: max(512, int(-(-x // 512) * 512))
+    Vp, Ep = R512(V), R512(E)
+    # triplet count capped at 16·E (max_num_neighbors-style truncation)
+    T = R512(min(16 * E, 2 ** 31 // 8))
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if cfg.family == "dimenet":
+        params_abs = jax.eval_shape(lambda k: init_dimenet(k, cfg), key_abs)
+    else:
+        params_abs = jax.eval_shape(lambda k: init_mace(k, cfg), key_abs)
+    params_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())), params_abs)
+    opt = AdamW(lr=1e-3)
+    opt_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())),
+        jax.eval_shape(opt.init, params_abs))
+
+    batch_abs = {
+        "pos": _sds((Vp, 3), jnp.float32, mesh, sp1),
+        "species": _sds((Vp,), jnp.int32, mesh, sp1),
+        "src": _sds((Ep,), jnp.int32, mesh, sp1),
+        "dst": _sds((Ep,), jnp.int32, mesh, sp1),
+        "edge_mask": _sds((Ep,), jnp.bool_, mesh, sp1),
+        "target": _sds((Vp,), jnp.float32, mesh, sp1),
+    }
+    if cfg.family == "dimenet":
+        batch_abs.update({
+            "tri_kj": _sds((T,), jnp.int32, mesh, sp1),
+            "tri_ji": _sds((T,), jnp.int32, mesh, sp1),
+            "tri_mask": _sds((T,), jnp.bool_, mesh, sp1),
+        })
+
+    def loss_fn(params, b):
+        if cfg.family == "dimenet":
+            def wsc(t):
+                return jax.lax.with_sharding_constraint(
+                    t, _ns(mesh, P(axes, *([None] * (t.ndim - 1)))))
+            out = dimenet_forward(params, b["pos"], b["species"], b["src"],
+                                  b["dst"], b["edge_mask"], b["tri_kj"],
+                                  b["tri_ji"], b["tri_mask"], cfg, wsc=wsc)
+        else:
+            def prop(m, dst):
+                # keep edge messages edge-sharded (otherwise SPMD replicates
+                # the [E, ch, m] tensors after the node-feature all-gather)
+                m = jax.lax.with_sharding_constraint(
+                    m, _ns(mesh, P(axes, None, None)))
+                agg = jax.ops.segment_sum(m, dst, Vp)
+                return jax.lax.with_sharding_constraint(
+                    agg, _ns(mesh, P(axes, None, None)))
+            out = mace_forward(params, b["pos"], b["species"], b["src"],
+                               b["dst"], b["edge_mask"], cfg, prop_fn=prop)
+        return jnp.mean((out[:, 0] - b["target"]) ** 2)
+
+    def train_step(params, opt_state, b):
+        loss, grads = jax.value_and_grad(loss_fn)(params, b)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    out_sh = (jax.tree.map(lambda a: a.sharding, params_abs),
+              jax.tree.map(lambda a: a.sharding, opt_abs), _ns(mesh, P()))
+    return Cell(arch, shape.name, "train", train_step,
+                (params_abs, opt_abs, batch_abs), out_sh,
+                {"model_flops": 3.0 * _gnn_flops(cfg, V, E, 3, T),
+                 "nodes": V, "edges": E, "triplets": T, "exchange": "spmd"},
+                donate_argnums=(0, 1))
+
+
+def _gnn_batched_cell(arch, cfg: GNNConfig, shape: GNNShape, mesh: Mesh,
+                      minibatch: bool) -> Cell:
+    """minibatch_lg (sampled subgraphs, one per data shard) and molecule
+    (128 small graphs) — batch-parallel over dp, model replicated."""
+    ax = mesh_axes(mesh)
+    dp = shd.dp_entry(ax["dp"])
+    if minibatch:
+        G = ax["dp_size"]
+        seeds = shape.batch_nodes
+        f1, f2 = shape.fanout
+        n_sub = R8(seeds * (1 + f1 + f1 * f2))
+        e_sub = R8(seeds * (f1 + f1 * f2))
+        d_in = shape.d_feat
+    else:
+        G = shape.batch_graphs
+        n_sub, e_sub, d_in = R8(shape.n_nodes), R8(shape.n_edges), 16
+    T = R8(e_sub * 8)
+    sp = P(dp)
+    molecular = cfg.family in ("dimenet", "mace")
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if cfg.family == "dimenet":
+        params_abs = jax.eval_shape(lambda k: init_dimenet(k, cfg), key_abs)
+    elif cfg.family == "mace":
+        params_abs = jax.eval_shape(lambda k: init_mace(k, cfg), key_abs)
+    else:
+        params_abs = jax.eval_shape(
+            lambda k: init_gnn(k, cfg, d_in, cfg.n_classes), key_abs)
+    params_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())), params_abs)
+    opt = AdamW(lr=1e-3)
+    opt_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())),
+        jax.eval_shape(opt.init, params_abs))
+
+    g = lambda *s: _sds((G,) + s, jnp.int32, mesh, P(dp, *([None] * len(s))))
+    gf = lambda *s: _sds((G,) + s, jnp.float32, mesh,
+                         P(dp, *([None] * len(s))))
+    gb = lambda *s: _sds((G,) + s, jnp.bool_, mesh, P(dp, *([None] * len(s))))
+    batch_abs = {"src": g(e_sub), "dst": g(e_sub), "edge_mask": gb(e_sub)}
+    if molecular:
+        batch_abs.update({"pos": gf(n_sub, 3), "species": g(n_sub),
+                          "target": gf(n_sub)})
+        if cfg.family == "dimenet":
+            batch_abs.update({"tri_kj": g(T), "tri_ji": g(T),
+                              "tri_mask": gb(T)})
+    elif minibatch:
+        batch_abs.update({"feats": gf(n_sub, d_in), "labels": g(n_sub),
+                          "train_mask": gb(n_sub),
+                          "edge_norm": gf(e_sub)})
+    else:  # molecule: GRAPH-level classification (GIN-TU semantics)
+        batch_abs.update({"feats": gf(n_sub, d_in), "labels": g(),
+                          "edge_norm": gf(e_sub)})
+
+    def loss_one(params, b):
+        if cfg.family == "dimenet":
+            out = dimenet_forward(params, b["pos"], b["species"], b["src"],
+                                  b["dst"], b["edge_mask"], b["tri_kj"],
+                                  b["tri_ji"], b["tri_mask"], cfg)
+            return jnp.mean((out[:, 0] - b["target"]) ** 2)
+        if cfg.family == "mace":
+            out = mace_forward(params, b["pos"], b["species"], b["src"],
+                               b["dst"], b["edge_mask"], cfg)
+            return jnp.mean((out[:, 0] - b["target"]) ** 2)
+        if minibatch:
+            gb_ = GraphBatch(b["feats"], b["src"], b["dst"], b["edge_mask"],
+                             b["labels"], b["train_mask"],
+                             edge_norm=b["edge_norm"])
+            return gnn_loss(params, gb_, cfg)
+        # one molecule per vmap lane: mean-pool to a graph logit
+        gb_ = GraphBatch(b["feats"], b["src"], b["dst"], b["edge_mask"],
+                         b["labels"][None], jnp.ones((1,), bool),
+                         edge_norm=b["edge_norm"],
+                         graph_ids=jnp.zeros((n_sub,), jnp.int32),
+                         num_graphs=1)
+        return gnn_loss(params, gb_, cfg)
+
+    def loss_fn(params, batch):
+        return jnp.mean(jax.vmap(lambda b: loss_one(params, b))(batch))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    out_sh = (jax.tree.map(lambda a: a.sharding, params_abs),
+              jax.tree.map(lambda a: a.sharding, opt_abs), _ns(mesh, P()))
+    return Cell(arch, shape.name, "train", train_step,
+                (params_abs, opt_abs, batch_abs), out_sh,
+                {"model_flops": 3.0 * G * _gnn_flops(cfg, n_sub, e_sub, d_in,
+                                                     T),
+                 "subgraphs": G, "nodes_per": n_sub, "edges_per": e_sub},
+                donate_argnums=(0, 1))
+
+
+def _dimenet_fullgraph_agent_cell(arch, cfg: GNNConfig, shape: GNNShape,
+                                  mesh: Mesh) -> Cell:
+    """§Perf-optimized DimeNet full-graph: both nested combines
+    (triplet→edge, edge→node) through the Agent-Graph exchange, triplets
+    ingress-sorted by kj edge so the message gather is local."""
+    from repro.models.dimenet import dimenet_forward_sharded
+    ax = mesh_axes(mesh)
+    K = ax["n_devices"]
+    axes = ax["all"]
+    spec = P(axes)
+    R512 = lambda x: max(512, int(-(-x // 512) * 512))
+    V, E = shape.n_nodes, shape.n_edges
+    T = min(16 * E, 2 ** 31 // 8)
+    e_loc = R512(-(-E // K))
+    v_loc = R512(-(-V // K))
+    t_loc = R512(-(-T // K))
+    # combiner estimates: remote-ji triplet targets ≈ T_loc/8 distinct edges,
+    # remote-dst node targets ≈ 2·V_loc (scale-free fan-in)
+    est_tri = dict(cap=e_loc, e_pad=8, s_pad=8,
+                   c_pad=R512(min(e_loc, t_loc // 8)),
+                   s_x_pad=8,
+                   c_x_pad=R8(max(8, 2 * min(e_loc, t_loc // 8) // K)))
+    est_node = dict(cap=v_loc, e_pad=8, s_pad=8, c_pad=R512(2 * v_loc),
+                    s_x_pad=8, c_x_pad=R8(max(8, 4 * v_loc // K)))
+    topo_tri = _abstract_topo(est_tri, K, mesh, spec)
+    topo_node = _abstract_topo(est_node, K, mesh, spec)
+    ch = cfg.d_hidden
+    g = lambda *s: _sds((K,) + s, jnp.int32, mesh, spec)
+    gf = lambda *s: _sds((K,) + s, jnp.float32, mesh, spec)
+    gb = lambda *s: _sds((K,) + s, jnp.bool_, mesh, spec)
+    shard_abs = {
+        "d": gf(e_loc), "edge_mask": gb(e_loc),
+        "species_src": g(e_loc), "species_dst": g(e_loc),
+        "tri_kj_loc": g(t_loc), "tri_tgt_slot": g(t_loc),
+        "tri_mask": gb(t_loc),
+        "sbf": gf(t_loc, cfg.n_spherical * cfg.n_radial),
+        "dst_slot": g(e_loc), "target": gf(v_loc),
+    }
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())),
+        jax.eval_shape(lambda k: init_dimenet(k, cfg), key_abs))
+    opt = AdamW(lr=1e-3)
+    opt_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=_ns(mesh, P())),
+        jax.eval_shape(opt.init, params_abs))
+
+    def loss_fn(params, topo_t, topo_n, shard):
+        def shard_loss(tt, tn, sh):
+            sq = lambda t: jax.tree.map(lambda a: a[0], t)
+            tt, tn, sh = sq(tt), sq(tn), sq(sh)
+            out = dimenet_forward_sharded(params, sh, tt, tn, cfg, axes)
+            err = ((out[:, 0] - sh["target"]) ** 2).sum()
+            num = jax.lax.psum(err, axes)
+            den = jax.lax.psum(jnp.float32(sh["target"].shape[0]), axes)
+            return (num / den)[None]
+
+        tree_spec = lambda t: jax.tree.map(
+            lambda _: spec, t, is_leaf=lambda x: hasattr(x, "ndim"))
+        loss = jax.shard_map(
+            shard_loss, mesh=mesh,
+            in_specs=(tree_spec(topo_t), tree_spec(topo_n), tree_spec(shard)),
+            out_specs=P(axes), check_vma=False)(topo_t, topo_n, shard)
+        return loss.mean()
+
+    def train_step(params, opt_state, topo_t, topo_n, shard):
+        loss, grads = jax.value_and_grad(loss_fn)(params, topo_t, topo_n,
+                                                  shard)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    out_sh = (jax.tree.map(lambda a: a.sharding, params_abs),
+              jax.tree.map(lambda a: a.sharding, opt_abs), _ns(mesh, P()))
+    return Cell(arch, shape.name, "train", train_step,
+                (params_abs, opt_abs, topo_tri, topo_node, shard_abs), out_sh,
+                {"model_flops": 3.0 * _gnn_flops(cfg, V, E, 3, T),
+                 "nodes": V, "edges": E, "triplets": T,
+                 "exchange": "agent-2level",
+                 "est_tri": est_tri, "est_node": est_node},
+                donate_argnums=(0, 1))
+
+
+def _gnn_cell(arch, cfg: GNNConfig, shape: GNNShape, mesh: Mesh) -> Cell:
+    if shape.kind == "full_graph":
+        if cfg.family in ("gcn", "gin"):
+            return _gnn_fullgraph_agent_cell(arch, cfg, shape, mesh)
+        if cfg.family == "dimenet" and shape.n_edges > 10_000_000:
+            # §Perf: GSPMD gathers the full [E, ch] message tensor per block
+            # at this scale (infeasible); route through the agent exchange
+            return _dimenet_fullgraph_agent_cell(arch, cfg, shape, mesh)
+        return _gnn_fullgraph_spmd_cell(arch, cfg, shape, mesh)
+    return _gnn_batched_cell(arch, cfg, shape, mesh,
+                             minibatch=shape.kind == "minibatch")
+
+
+# =================================================================== recsys
+def _recsys_cell(arch, cfg: RecSysConfig, shape: RecSysShape,
+                 mesh: Mesh) -> Cell:
+    ax = mesh_axes(mesh)
+    dp, tp = shd.dp_entry(ax["dp"]), ax["tp"]
+    rows = cfg.total_rows()
+    rows_pad = -(-rows // ax["tp_size"]) * ax["tp_size"]
+    rps = rows_pad // ax["tp_size"]
+    pspecs = shd.recsys_param_specs(cfg, ax["dp"], tp)
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_abs = jax.eval_shape(lambda k: init_autoint(k, cfg), key_abs)
+    # pad the table rows so the tp shards are even
+    params_abs = dict(params_abs)
+    params_abs["table"] = jax.ShapeDtypeStruct(
+        (rows_pad, cfg.embed_dim), jnp.float32)
+    params_abs = _abstract(params_abs, mesh, pspecs)
+
+    def lookup(table, ids):
+        def shard_lk(tbl, ids_l):
+            idx = jax.lax.axis_index(tp)
+            return sharded_embedding_lookup(tbl, ids_l, idx, rps, tp)
+        return jax.shard_map(
+            shard_lk, mesh=mesh, in_specs=(P(tp, None), P(dp, None)),
+            out_specs=P(dp, None, None), check_vma=False)(table, ids)
+
+    B = shape.batch
+    flops_interact = (cfg.n_attn_layers *
+                      (3 * cfg.n_sparse * cfg.embed_dim * cfg.d_attn * 2 +
+                       2 * cfg.n_sparse ** 2 * cfg.d_attn * 2))
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-3)
+        ospecs = shd.opt_specs(pspecs)
+        opt_abs = _abstract(jax.eval_shape(opt.init, params_abs), mesh, ospecs)
+        batch_abs = {"ids": _sds((B, cfg.n_sparse), jnp.int32, mesh,
+                                 P(dp, None)),
+                     "labels": _sds((B,), jnp.int32, mesh, P(dp))}
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(autoint_loss)(
+                params, batch, cfg, lookup_fn=lookup)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        out_sh = (shd.to_shardings(mesh, pspecs),
+                  jax.tree.map(lambda s: _ns(mesh, s), ospecs),
+                  _ns(mesh, P()))
+        return Cell(arch, shape.name, "train", train_step,
+                    (params_abs, opt_abs, batch_abs), out_sh,
+                    {"model_flops": 3.0 * B * flops_interact,
+                     "rows": rows, "batch": B},
+                    donate_argnums=(0, 1))
+
+    if shape.kind == "serve":
+        ids_abs = _sds((B, cfg.n_sparse), jnp.int32, mesh, P(dp, None))
+
+        def serve_step(params, ids):
+            return autoint_logits(params, ids, cfg, lookup_fn=lookup)
+
+        return Cell(arch, shape.name, "serve", serve_step,
+                    (params_abs, ids_abs), _ns(mesh, P(dp)),
+                    {"model_flops": 1.0 * B * flops_interact,
+                     "rows": rows, "batch": B})
+
+    # retrieval: 1 query scored against n_candidates, candidates sharded
+    # (rows padded to a 512-device multiple so both meshes divide evenly)
+    N = -(-shape.n_candidates // 512) * 512
+    allax = ax["all"]
+    ids_abs = _sds((1, cfg.n_sparse), jnp.int32, mesh, P())
+    cand_abs = _sds((N, cfg.d_attn), jnp.float32, mesh, P(allax, None))
+    proj_abs = _sds((cfg.n_sparse * cfg.d_attn, cfg.d_attn), jnp.float32,
+                    mesh, P())
+
+    def retrieval_step(params, ids, cand, proj):
+        return retrieval_scores(params, ids, cand, proj, cfg)
+
+    return Cell(arch, shape.name, "retrieval", retrieval_step,
+                (params_abs, ids_abs, cand_abs, proj_abs),
+                _ns(mesh, P(allax)),
+                {"model_flops": 1.0 * flops_interact +
+                                2.0 * N * cfg.d_attn,
+                 "candidates": N})
+
+
+# =================================================================== factory
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg, family = get_config(arch)
+    shape = get_shape(arch, shape_name)
+    if family == "lm":
+        return _lm_cell(arch, cfg, shape, mesh)
+    if family == "gnn":
+        return _gnn_cell(arch, cfg, shape, mesh)
+    if family == "recsys":
+        return _recsys_cell(arch, cfg, shape, mesh)
+    raise ValueError(family)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (not module constants) so importing never touches jax
+device state.  The dry-run sets XLA_FLAGS for 512 host devices BEFORE any
+import; real deployments get the same shapes from the TPU runtime.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> dict:
+    """Logical roles: dp axes tuple, tp axis, and the flattened graph axis."""
+    names = tuple(mesh.axis_names)
+    tp = "model" if "model" in names else names[-1]
+    dp = tuple(n for n in names if n != tp)
+    return {"dp": dp, "tp": tp, "all": names,
+            "dp_size": int(jax.numpy.prod(
+                jax.numpy.array([mesh.shape[a] for a in dp]))) if dp else 1,
+            "tp_size": mesh.shape[tp],
+            "n_devices": mesh.size}

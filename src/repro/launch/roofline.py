@@ -1,0 +1,365 @@
+"""Static roofline analyzer over compiled HLO text.
+
+Why not `compiled.cost_analysis()`: XLA counts a `while` body ONCE, so any
+scan-over-layers / chunked-attention model is undercounted by the trip count
+(verified experimentally: L=2,4,8 layer scans report identical flops).  This
+analyzer parses the optimized per-device HLO, resolves the call graph
+(fusions, calls, whiles, conditionals), extracts loop trip counts from the
+`compare(iter, constant)` condition pattern, and multiplies per-computation
+costs accordingly:
+
+  FLOPs       — dot/convolution ops: 2 · |result| · contracted-size
+  HBM bytes   — operand+result bytes of fusion/dot/collective/copy/
+                scatter/gather/reduce/sort/dynamic-slice ops (fusion
+                boundaries ≈ HBM round trips)
+  link bytes  — per collective type: all-gather → result bytes,
+                reduce-scatter/all-to-all/permute → operand bytes,
+                all-reduce → 2 × operand bytes (ring)
+
+All quantities are PER DEVICE (SPMD-partitioned module).  Roofline terms
+use TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # operands + attributes (raw)
+
+    def operand_names(self) -> List[str]:
+        # operands are %refs before the closing paren of the op call
+        depth, out, cur = 0, [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            cur.append(ch)
+        args = "".join(cur)
+        return re.findall(r"%([\w\.\-]+)", args)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    is_entry: bool = False
+
+    def symtab(self) -> Dict[str, Instruction]:
+        return {i.name: i for i in self.instructions}
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(2), [], is_entry=bool(m.group(1)))
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if m:
+            cur.instructions.append(Instruction(*m.groups()))
+    return comps
+
+
+def _dot_flops(inst: Instruction, symtab: Dict[str, Instruction],
+               params_types: Dict[str, str]) -> float:
+    """2 · |result| · contracted-size from lhs shape + contracting dims."""
+    ops = inst.operand_names()
+    if not ops:
+        return 0.0
+    lhs = ops[0]
+    lhs_type = (symtab[lhs].type_str if lhs in symtab
+                else params_types.get(lhs, ""))
+    m = _SHAPE_RE.search(lhs_type)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    contracted = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            contracted *= dims[int(d)] if int(d) < len(dims) else 1
+    return 2.0 * shape_elems(inst.type_str) * contracted
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_BYTES_OPS = {"fusion", "dot", "convolution", "copy", "scatter", "gather",
+              "reduce", "sort", "dynamic-slice", "dynamic-update-slice",
+              "transpose", "broadcast", "concatenate", "select-and-scatter",
+              "reduce-window", "iota", "convert", "slice", "reshape", "pad",
+              "select"} | set(_COLLECTIVES)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    link_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_collectives: int = 0
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add_bytes(self, op: str, b: float):
+        self.hbm_bytes += b
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + b
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.link_bytes += o.link_bytes
+        for k, v in o.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v
+        for k, v in o.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v
+        self.n_collectives += o.n_collectives
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.hbm_bytes * k, self.link_bytes * k,
+                    {a: b * k for a, b in self.coll_bytes.items()},
+                    int(self.n_collectives * k),
+                    {a: b * k for a, b in self.bytes_by_op.items()})
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        self.warnings: List[str] = []
+
+    # --------------------------------------------------------- trip counts
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        consts: Dict[str, int] = {}
+        for inst in comp.instructions:
+            if inst.opcode == "constant":
+                m = re.match(r"([\-\d]+)", inst.rest.rstrip(") "))
+                if m:
+                    try:
+                        consts[inst.name] = int(m.group(1))
+                    except ValueError:
+                        pass
+        for inst in comp.instructions:
+            direct = inst.opcode == "compare" and "direction=LT" in inst.rest
+            # CPU XLA wraps the compare in a kLoop fusion; the constant bound
+            # is an operand of the fusion site
+            wrapped = (inst.opcode == "fusion"
+                       and "compare" in (inst.attr("calls") or ""))
+            if direct or wrapped:
+                for op in inst.operand_names():
+                    if op in consts:
+                        return max(1, consts[op])
+        self.warnings.append(f"no trip count for {cond_name}; assuming 1")
+        return 1
+
+    # ------------------------------------------------------------- costing
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        if comp is None:
+            self._memo[name] = cost
+            return cost
+        self._memo[name] = cost  # break cycles
+        symtab = comp.symtab()
+        params_types = {i.name: i.type_str for i in comp.instructions
+                        if i.opcode == "parameter"}
+        for inst in comp.instructions:
+            op = inst.opcode
+            if op == "while":
+                body = inst.attr("body")
+                cond = inst.attr("condition")
+                # primary: XLA records the static trip count directly
+                m = re.search(r'"known_trip_count":\{"n":"?(\d+)', inst.rest)
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    trips = self.trip_count(cond) if cond else 1
+                if body:
+                    cost += self.comp_cost(body).scaled(trips)
+                if cond:
+                    cost += self.comp_cost(cond).scaled(trips)
+                continue
+            if op in ("fusion", "call", "custom-call", "map"):
+                callee = inst.attr("calls") or inst.attr("to_apply")
+                if callee:
+                    cost += self.comp_cost(callee)
+            if op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    callee = inst.attr(key)
+                    if callee:
+                        cost += self.comp_cost(callee)
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}",
+                                     inst.rest):
+                    for c in re.findall(r"%([\w\.\-]+)", m.group(1)):
+                        cost += self.comp_cost(c)
+            if op in ("dot", "convolution"):
+                cost.flops += _dot_flops(inst, symtab, params_types)
+            # HBM bytes: top-level data-moving ops.  Slice-like ops touch
+            # only the slice, not the (possibly loop-carried) big buffer —
+            # critical inside while bodies where operands repeat per trip.
+            if op in _BYTES_OPS:
+                result_b = shape_bytes(inst.type_str)
+                op_sizes = []
+                for o in inst.operand_names():
+                    t = (symtab[o].type_str if o in symtab
+                         else params_types.get(o))
+                    if t:
+                        op_sizes.append(shape_bytes(t))
+                operand_b = sum(op_sizes)
+                max_op = max(op_sizes, default=0)
+                callee_ops = set()
+                if op == "fusion":
+                    callee = inst.attr("calls")
+                    ccomp = self.comps.get(callee) if callee else None
+                    if ccomp:
+                        callee_ops = {i.opcode for i in ccomp.instructions}
+                if op in ("dynamic-slice", "slice", "gather"):
+                    cost.add_bytes(op, 2 * result_b)     # read slice + write
+                elif (op == "dynamic-update-slice"
+                      or (op == "fusion"
+                          and "dynamic-update-slice" in callee_ops
+                          and result_b == max_op)):
+                    upd = operand_b - max_op             # small operands only
+                    cost.add_bytes("dus", 2 * max(upd, result_b // 64))
+                elif (op == "fusion" and "dynamic-slice" in callee_ops
+                      and result_b < max_op):
+                    cost.add_bytes("fused-ds", 2 * result_b + (operand_b - max_op))
+                else:
+                    cost.add_bytes(op, result_b + operand_b)
+            if op in _COLLECTIVES:
+                result_b = shape_bytes(inst.type_str)
+                operand_b = 0
+                for o in inst.operand_names():
+                    t = (symtab[o].type_str if o in symtab
+                         else params_types.get(o))
+                    if t:
+                        operand_b += shape_bytes(t)
+                if op == "all-gather":
+                    link = result_b
+                elif op == "all-reduce":
+                    link = 2 * operand_b
+                else:
+                    link = operand_b
+                cost.link_bytes += link
+                cost.coll_bytes[op] = cost.coll_bytes.get(op, 0.0) + link
+                cost.n_collectives += 1
+        return cost
+
+    def entry_cost(self) -> Cost:
+        for name, comp in self.comps.items():
+            if comp.is_entry:
+                return self.comp_cost(name)
+        raise ValueError("no ENTRY computation found")
+
+
+# Pure-elementwise top-level ops: CPU XLA materializes them, TPU fuses them
+# into producers/consumers.  The "fused" memory model excludes them.
+_FUSABLE = {"convert", "copy", "broadcast", "transpose", "reshape", "pad",
+            "iota", "select", "concatenate"}
+
+
+def analyze(text: str) -> Dict:
+    """Full per-device analysis + roofline terms (seconds).
+
+    Two memory models:
+      memory_time_s        — every materialized buffer of the CPU-compiled
+                             HLO (conservative upper bound);
+      memory_time_fused_s  — excludes pure-elementwise ops that a TPU
+                             compilation fuses into neighbors (realistic).
+    Dominance uses the fused model.
+    """
+    a = HloAnalyzer(text)
+    c = a.entry_cost()
+    compute_t = c.flops / PEAK_FLOPS
+    memory_t = c.hbm_bytes / HBM_BW
+    fused_bytes = c.hbm_bytes - sum(
+        v for k, v in c.bytes_by_op.items() if k in _FUSABLE)
+    memory_fused_t = fused_bytes / HBM_BW
+    coll_t = c.link_bytes / LINK_BW
+    dominant = max(("compute", compute_t), ("memory", memory_fused_t),
+                   ("collective", coll_t), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": c.flops,
+        "hbm_bytes_per_device": c.hbm_bytes,
+        "hbm_bytes_fused_per_device": fused_bytes,
+        "link_bytes_per_device": c.link_bytes,
+        "coll_bytes_by_type": dict(c.coll_bytes),
+        "n_collectives": c.n_collectives,
+        "compute_time_s": compute_t,
+        "memory_time_s": memory_t,
+        "memory_time_fused_s": memory_fused_t,
+        "collective_time_s": coll_t,
+        "dominant": dominant,
+        "bound_time_s": max(compute_t, memory_fused_t, coll_t),
+        "bytes_by_op": {k: v for k, v in sorted(c.bytes_by_op.items(),
+                                                key=lambda kv: -kv[1])[:8]},
+        "warnings": a.warnings[:10],
+    }

@@ -1,0 +1,2 @@
+# Model families are imported lazily by the config registry; importing the
+# package does not pull heavy modules.

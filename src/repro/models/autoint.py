@@ -1,0 +1,103 @@
+"""AutoInt (arXiv:1810.11921): self-attention feature interaction for CTR.
+
+Hot path: the sparse embedding lookup over 39 fields with a multi-million-row
+concatenated table — an EmbeddingBag (gather + segment-sum), i.e. the GRE
+scatter-combine primitive.  Distributed serving row-shards the table and uses
+the combiner-agent pattern (local masked partial lookups + ONE psum), see
+`repro.nn.embedding.sharded_embedding_lookup`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecSysConfig
+from repro.nn.embedding import embedding_init, sharded_embedding_lookup
+from repro.nn.layers import dense_init, mlp_apply, mlp_init
+
+
+def field_offsets(cfg: RecSysConfig) -> np.ndarray:
+    """Start row of each field in the concatenated embedding table."""
+    return np.concatenate([[0], np.cumsum(cfg.vocab_sizes)[:-1]]).astype(np.int64)
+
+
+def init_autoint(key, cfg: RecSysConfig):
+    ks = iter(jax.random.split(key, 8 + 4 * cfg.n_attn_layers))
+    d, da, nh = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    params = {
+        "table": embedding_init(next(ks), cfg.total_rows(), d),
+        "layers": [],
+        "final": dense_init(next(ks), cfg.n_sparse * da, 1),
+        "final_b": jnp.zeros((1,)),
+    }
+    d_in = d
+    for _ in range(cfg.n_attn_layers):
+        params["layers"].append({
+            "wq": dense_init(next(ks), d_in, da),
+            "wk": dense_init(next(ks), d_in, da),
+            "wv": dense_init(next(ks), d_in, da),
+            "wr": dense_init(next(ks), d_in, da),   # residual projection
+        })
+        d_in = da
+    return params
+
+
+def interact(params, emb: jnp.ndarray, cfg: RecSysConfig) -> jnp.ndarray:
+    """emb [B, F, d] -> AutoInt representation [B, F*d_attn]."""
+    B, F, _ = emb.shape
+    nh = cfg.n_heads
+    h = emb
+    for lp in params["layers"]:
+        dh = cfg.d_attn // nh
+        q = (h @ lp["wq"]).reshape(B, F, nh, dh)
+        k = (h @ lp["wk"]).reshape(B, F, nh, dh)
+        v = (h @ lp["wv"]).reshape(B, F, nh, dh)
+        s = jnp.einsum("bfnh,bgnh->bnfg", q, k) / np.sqrt(dh)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bnfg,bgnh->bfnh", a, v).reshape(B, F, nh * dh)
+        h = jax.nn.relu(o + h @ lp["wr"])
+    return h.reshape(B, F * cfg.d_attn)
+
+
+def autoint_logits(params, ids: jnp.ndarray, cfg: RecSysConfig,
+                   lookup_fn=None) -> jnp.ndarray:
+    """ids [B, F]: GLOBAL row ids (field offsets already added)."""
+    if lookup_fn is None:
+        emb = jnp.take(params["table"], ids, axis=0)          # [B, F, d]
+    else:
+        emb = lookup_fn(params["table"], ids)
+    rep = interact(params, emb, cfg)
+    return (rep @ params["final"] + params["final_b"])[:, 0]
+
+
+def autoint_loss(params, batch: Dict[str, jnp.ndarray], cfg: RecSysConfig,
+                 lookup_fn=None) -> jnp.ndarray:
+    logits = autoint_logits(params, batch["ids"], cfg, lookup_fn)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_scores(params, ids: jnp.ndarray, cand_table: jnp.ndarray,
+                     proj: jnp.ndarray, cfg: RecSysConfig) -> jnp.ndarray:
+    """Retrieval scoring: one query's AutoInt representation against N
+    candidates via a single batched dot product (no loop).
+
+    ids [1, F]; cand_table [N, d_attn]; proj [F*d_attn, d_attn]."""
+    rep = interact(params, jnp.take(params["table"], ids, axis=0), cfg)
+    qvec = rep @ proj                                          # [1, d_attn]
+    return (cand_table @ qvec[0]).reshape(-1)                  # [N]
+
+
+def synth_batch(key, cfg: RecSysConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    """Synthetic criteo-like batch with power-law id distribution."""
+    kid, klab = jax.random.split(key)
+    offs = jnp.asarray(field_offsets(cfg))
+    sizes = jnp.asarray(cfg.vocab_sizes)
+    u = jax.random.uniform(kid, (batch, cfg.n_sparse))
+    ids = (u ** 3.0 * (sizes - 1)).astype(jnp.int32) + offs[None, :]
+    labels = jax.random.bernoulli(klab, 0.25, (batch,)).astype(jnp.int32)
+    return {"ids": ids, "labels": labels}

@@ -1,0 +1,190 @@
+"""GCN and GIN on the GRE scatter-combine primitive.
+
+The layer aggregation IS the paper's active-message pattern:
+`gather(src) → message → segment-combine(dst)`; full-graph distributed
+training runs each layer's propagation through the Agent-Graph exchange
+(`propagate_sharded`), i.e. local partial sums on combiner slots + ONE
+all_to_all per layer — the same machinery as `repro.core.dist_engine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.dist_engine import ShardTopology, flush_combiners, refresh_scatter_agents
+from repro.core.vertex_program import MONOIDS
+from repro.nn.layers import dense_init, mlp_apply, mlp_init
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GraphBatch:
+    """Padded COO graph (single shard / replicated)."""
+    node_feats: jnp.ndarray       # [V, F]
+    src: jnp.ndarray              # [E]
+    dst: jnp.ndarray              # [E]
+    edge_mask: jnp.ndarray        # [E]
+    labels: jnp.ndarray           # [V] int or [G] for graph tasks
+    train_mask: jnp.ndarray       # [V]
+    edge_norm: Optional[jnp.ndarray] = None   # [E] sym-norm coefficients
+    graph_ids: Optional[jnp.ndarray] = None   # [V] for batched molecule graphs
+    num_graphs: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+
+def propagate(h: jnp.ndarray, src, dst, edge_mask, num_nodes: int,
+              edge_weight=None, use_pallas: bool = False) -> jnp.ndarray:
+    """Scatter-combine a feature matrix along edges (⊕ = sum)."""
+    msg = jnp.take(h, src, axis=0)
+    if edge_weight is not None:
+        msg = msg * edge_weight[:, None]
+    msg = jnp.where(edge_mask[:, None], msg, 0)
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.segment_combine(msg, dst, num_nodes, "sum")
+    return jax.ops.segment_sum(msg, dst, num_nodes)
+
+
+def propagate_sharded(h_slots: jnp.ndarray, topo: ShardTopology, axes,
+                      edge_weight=None) -> jnp.ndarray:
+    """Distributed propagation over one Agent-Graph shard (inside shard_map).
+
+    h_slots: [num_slots, F] — master features in [0, cap); agent slots are
+    refreshed here.  Returns combined [num_slots, F] (masters valid).
+    """
+    part = topo.part
+    active = jnp.ones((h_slots.shape[0],), dtype=bool)
+    h_slots, _ = refresh_scatter_agents(topo, h_slots, active, axes, 0.0)
+    combined = propagate(h_slots, part.src, part.dst, part.edge_mask,
+                         part.num_slots, edge_weight)
+    flushed = flush_combiners(topo, combined, axes, MONOIDS["sum"])
+    local = jnp.where(
+        (jnp.arange(part.num_slots) < part.num_masters)[:, None], combined, 0)
+    return local + flushed
+
+
+# ----------------------------------------------------------------- GCN / GIN
+def init_gnn(key, cfg: GNNConfig, d_in: int, n_out: int):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    dims = [d_in] + [cfg.d_hidden] * cfg.n_layers
+    layers = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "gcn":
+            layers.append({"w": dense_init(ks[i], dims[i], dims[i + 1]),
+                           "b": jnp.zeros((dims[i + 1],))})
+        else:  # gin: MLP per layer + learnable eps
+            layers.append({
+                "mlp": mlp_init(ks[i], [dims[i], dims[i + 1], dims[i + 1]]),
+                "eps": jnp.zeros(()) if cfg.eps_learnable else None,
+            })
+    return {"layers": layers, "out": dense_init(ks[-1], cfg.d_hidden, n_out),
+            "out_b": jnp.zeros((n_out,))}
+
+
+def gnn_forward(params, batch: GraphBatch, cfg: GNNConfig,
+                prop_fn=None) -> jnp.ndarray:
+    """Returns per-node logits [V, n_out] (or per-graph after pooling).
+
+    `prop_fn(h, edge_weight) -> aggregated` abstracts local vs agent-sharded
+    propagation; defaults to the local/GSPMD path.
+    """
+    V = batch.node_feats.shape[0]
+    if prop_fn is None:
+        def prop_fn(h, ew):
+            return propagate(h, batch.src, batch.dst, batch.edge_mask, V, ew)
+
+    h = batch.node_feats
+    for lp in params["layers"]:
+        if cfg.family == "gcn":
+            agg = prop_fn(h, batch.edge_norm)
+            h = jax.nn.relu(agg @ lp["w"] + lp["b"])
+        else:  # GIN: h = MLP((1 + eps) h + sum_neighbors)
+            agg = prop_fn(h, None)
+            eps = lp["eps"] if lp["eps"] is not None else 0.0
+            h = mlp_apply(lp["mlp"], (1.0 + eps) * h + agg, act=jax.nn.relu,
+                          final_act=True)
+    if batch.graph_ids is not None:  # graph classification: mean-pool
+        pooled = jax.ops.segment_sum(h, batch.graph_ids, batch.num_graphs)
+        cnt = jax.ops.segment_sum(jnp.ones((V, 1)), batch.graph_ids,
+                                  batch.num_graphs)
+        h = pooled / jnp.maximum(cnt, 1.0)
+    return h @ params["out"] + params["out_b"]
+
+
+def gnn_loss(params, batch: GraphBatch, cfg: GNNConfig, prop_fn=None):
+    logits = gnn_forward(params, batch, cfg, prop_fn)
+    if batch.graph_ids is not None:
+        labels, mask = batch.labels, jnp.ones_like(batch.labels, jnp.float32)
+    else:
+        labels, mask = batch.labels, batch.train_mask.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------------------------------- additional GNN families
+def gat_layer_init(key, d_in: int, d_out: int, n_heads: int = 1):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": dense_init(k1, d_in, d_out * n_heads),
+            "a_src": dense_init(k2, d_out, n_heads, scale=0.1)[:, :],
+            "a_dst": dense_init(k3, d_out, n_heads, scale=0.1)[:, :]}
+
+
+def gat_layer(params, h, src, dst, edge_mask, num_nodes, n_heads: int = 1,
+              leaky_slope: float = 0.2):
+    """Graph attention (GAT, arXiv:1710.10903) on scatter-combine:
+    SDDMM edge scores → segment-SOFTMAX (max-combine + sum-combine — the
+    engine's other two monoids) → weighted sum-combine."""
+    V = num_nodes
+    d_out = params["a_src"].shape[0]
+    z = (h @ params["w"]).reshape(V, n_heads, d_out)           # [V, H, F]
+    e_src = jnp.einsum("vhf,fh->vh", z, params["a_src"])
+    e_dst = jnp.einsum("vhf,fh->vh", z, params["a_dst"])
+    logits = jnp.take(e_src, src, axis=0) + jnp.take(e_dst, dst, axis=0)
+    logits = jax.nn.leaky_relu(logits, leaky_slope)
+    logits = jnp.where(edge_mask[:, None], logits, -1e30)
+    # numerically-stable segment softmax: ⊕=max then ⊕=sum
+    mx = jax.ops.segment_max(logits, dst, V)
+    p = jnp.exp(logits - jnp.take(jnp.where(jnp.isfinite(mx), mx, 0.0),
+                                  dst, axis=0))
+    p = jnp.where(edge_mask[:, None], p, 0.0)
+    denom = jax.ops.segment_sum(p, dst, V)
+    alpha = p / jnp.maximum(jnp.take(denom, dst, axis=0), 1e-9)
+    msgs = jnp.take(z, src, axis=0) * alpha[:, :, None]
+    out = jax.ops.segment_sum(msgs, dst, V)                    # [V, H, F]
+    return jax.nn.elu(out.reshape(V, n_heads * d_out))
+
+
+def sage_layer_init(key, d_in: int, d_out: int):
+    k1, k2 = jax.random.split(key)
+    return {"w_self": dense_init(k1, d_in, d_out),
+            "w_nbr": dense_init(k2, d_in, d_out)}
+
+
+def sage_layer(params, h, src, dst, edge_mask, num_nodes,
+               aggregator: str = "mean"):
+    """GraphSAGE (arXiv:1706.02216): mean or max neighbor aggregation."""
+    V = num_nodes
+    msgs = jnp.where(edge_mask[:, None], jnp.take(h, src, axis=0), 0.0)
+    if aggregator == "mean":
+        s = jax.ops.segment_sum(msgs, dst, V)
+        cnt = jax.ops.segment_sum(edge_mask.astype(h.dtype), dst, V)
+        agg = s / jnp.maximum(cnt, 1.0)[:, None]
+    else:  # max
+        neg = jnp.where(edge_mask[:, None], jnp.take(h, src, axis=0), -1e30)
+        agg = jax.ops.segment_max(neg, dst, V)
+        agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+    return jax.nn.relu(h @ params["w_self"] + agg @ params["w_nbr"])
+
+
+def compute_gcn_edge_norm(src, dst, edge_mask, num_nodes):
+    """Symmetric normalization 1/sqrt(deg_out(u) deg_in(v)) (host or jnp)."""
+    ones = edge_mask.astype(jnp.float32)
+    dout = jax.ops.segment_sum(ones, src, num_nodes)
+    din = jax.ops.segment_sum(ones, dst, num_nodes)
+    return (1.0 / jnp.sqrt(jnp.maximum(dout[src], 1.0)) *
+            1.0 / jnp.sqrt(jnp.maximum(din[dst], 1.0)))

@@ -1,0 +1,367 @@
+"""Decoder-only LM (dense GQA or MoE), scan-over-layers, three step kinds.
+
+Covers the 5 assigned LM architectures (command-r-plus-104b, smollm-135m,
+nemotron-4-15b, qwen3-moe-30b-a3b, granite-moe-1b-a400m) from `LMConfig`.
+
+Distribution context (`DistCtx`) carries mesh + logical axes; dense parts are
+GSPMD-sharded via in/out shardings at jit time (see repro/dist/sharding.py);
+the MoE block runs its scatter-combine dispatch under an explicit shard_map
+(expert axis = 'model', token axis = dp) as described in repro/nn/moe.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.nn.attention import apply_rope, decode_attention, gqa_attention
+from repro.nn.ffn import ffn_apply, ffn_init
+from repro.nn.layers import dense_init, rmsnorm, rmsnorm_init
+from repro.nn.moe import moe_ffn, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    """Mesh + logical axis names for distributed execution (None = local)."""
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ()      # data axes, e.g. ("pod", "data")
+    tp: Optional[str] = None      # tensor/expert axis, e.g. "model"
+
+    @property
+    def n_ep(self) -> int:
+        if self.mesh is None or self.tp is None:
+            return 1
+        return self.mesh.shape[self.tp]
+
+
+LOCAL_CTX = DistCtx()
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def embed_lookup(embed, tokens, spec, mesh, vocab=None, dtype_str=None):
+    """Embedding gather whose backward lands PRE-SHARDED.
+
+    The naive `take` backward scatters a full [V, D] partial on every device
+    before the cross-device reduce (12.5 GiB f32 for a 256k×12288 vocab);
+    constraining the cotangent inside a custom VJP lets SPMD produce the
+    reduce-scattered layout directly.
+    """
+    return jnp.take(embed, tokens, axis=0)
+
+
+def _embed_fwd(embed, tokens, spec, mesh, vocab, dtype_str):
+    return jnp.take(embed, tokens, axis=0), tokens
+
+
+def _embed_bwd(spec, mesh, vocab, dtype_str, res, dx):
+    tokens = res
+    edtype = jnp.dtype(dtype_str)
+    flat = dx.reshape(-1, dx.shape[-1])
+    demb = jax.ops.segment_sum(flat, tokens.reshape(-1), vocab)
+    if mesh is not None:
+        demb = jax.lax.with_sharding_constraint(
+            demb, jax.sharding.NamedSharding(mesh, spec))
+    dtok = np.zeros(tokens.shape, dtype=jax.dtypes.float0)
+    return demb.astype(edtype), dtok
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+# --------------------------------------------------------------------- init
+def init_layer(key, cfg: LMConfig):
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    p = {
+        "ln_attn": rmsnorm_init(d, dt),
+        "wq": dense_init(ks[0], d, nh * hd, dt),
+        "wk": dense_init(ks[1], d, nkv * hd, dt),
+        "wv": dense_init(ks[2], d, nkv * hd, dt),
+        "wo": dense_init(ks[3], nh * hd, d, dt),
+        "ln_ffn": rmsnorm_init(d, dt),
+    }
+    if cfg.moe:
+        p["moe"] = moe_init(ks[4], d, cfg.moe.d_ff_expert, cfg.moe.n_experts,
+                            cfg.gated, dt)
+    else:
+        p["ffn"] = ffn_init(ks[4], d, cfg.d_ff, cfg.gated, dt)
+    return p
+
+
+def init_lm(key, cfg: LMConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[init_layer(ks[i], cfg) for i in range(cfg.n_layers)])
+    dt = cfg.param_dtype
+    params = {
+        "embed": (jax.random.normal(ks[-3], (cfg.padded_vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "layers": layers,
+        "ln_out": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[-2], cfg.d_model, cfg.padded_vocab, dt)
+    return params
+
+
+def abstract_params(cfg: LMConfig):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda k: init_lm(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ------------------------------------------------------------------ forward
+def _attention_block(p, x, cfg: LMConfig, positions):
+    B, S, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv, cfg.d_head
+    h = rmsnorm(x, p["ln_attn"])
+    q = (h @ p["wq"]).reshape(B, S, nkv, nh // nkv, hd)
+    k = (h @ p["wk"]).reshape(B, S, nkv, hd)
+    v = (h @ p["wv"]).reshape(B, S, nkv, hd)
+    q = apply_rope(q.reshape(B, S, nkv * (nh // nkv), hd).transpose(0, 2, 1, 3),
+                   positions[:, None, :], cfg.rope_theta).transpose(0, 2, 1, 3)
+    q = q.reshape(B, S, nkv, nh // nkv, hd)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                   cfg.rope_theta).transpose(0, 2, 1, 3)
+    o = gqa_attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                      q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return x + o.reshape(B, S, nh * hd) @ p["wo"], (k, v)
+
+
+def _ffn_block(p, x, cfg: LMConfig, ctx: DistCtx):
+    B, S, d = x.shape
+    h = rmsnorm(x, p["ln_ffn"])
+    if cfg.moe is None:
+        return x + ffn_apply(p["ffn"], h, cfg.activation), 0.0
+    m = cfg.moe
+    if ctx.mesh is None or ctx.n_ep == 1:
+        out, aux = moe_ffn(p["moe"], h.reshape(B * S, d), m.top_k,
+                           m.n_experts, m.capacity_factor, cfg.activation)
+        return x + out.reshape(B, S, d), aux
+
+    wdp = (ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]) if ctx.dp else None
+    dp_entry = wdp
+    if ctx.mesh is not None and ctx.dp:
+        dp_size = int(np.prod([ctx.mesh.shape[a] for a in ctx.dp]))
+        if (B * S) % dp_size != 0:
+            dp_entry = None  # tiny decode batches: replicate tokens over dp
+    tok_spec = P(dp_entry, None)
+
+    def moe_shard(h_loc, pl):
+        idx = jax.lax.axis_index(ctx.tp)
+        # FSDP all-gather of this shard's expert weights over dp axes
+        if len(ctx.dp) > 0:
+            gather = lambda w, ax: jax.lax.all_gather(w, ctx.dp, axis=ax,
+                                                      tiled=True)
+            pl = dict(pl, w_in=gather(pl["w_in"], 1),
+                      w_out=gather(pl["w_out"], 2),
+                      **({"w_gate": gather(pl["w_gate"], 1)}
+                         if "w_gate" in pl else {}))
+        out, aux = moe_ffn(pl, h_loc, m.top_k, m.n_experts,
+                           m.capacity_factor, cfg.activation,
+                           shard_index=idx, n_shards=ctx.n_ep,
+                           axis_name=ctx.tp)
+        return out, jax.lax.pmean(aux, (ctx.tp,) + tuple(ctx.dp))
+
+    mp = p["moe"]
+    pspec = {"router": P(), "w_in": P(ctx.tp, wdp, None),
+             "w_out": P(ctx.tp, None, wdp)}
+    if "w_gate" in mp:
+        pspec["w_gate"] = P(ctx.tp, wdp, None)
+    out, aux = jax.shard_map(
+        moe_shard, mesh=ctx.mesh, in_specs=(tok_spec, pspec),
+        out_specs=(tok_spec, P()), check_vma=False)(
+        h.reshape(B * S, d), mp)
+    return x + out.reshape(B, S, d), aux
+
+
+def _activation_constraint(x, cfg: LMConfig, ctx: DistCtx):
+    """Between-layer activation sharding: batch over dp, sequence over tp
+    (Megatron-SP style — attention/ffn gather what they need internally).
+    Cuts stored remat boundaries by the tp degree."""
+    if ctx.mesh is None or not cfg.seq_shard_activations:
+        return x
+    dp_entry = (ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]) if ctx.dp else None
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, P(dp_entry, ctx.tp, None)))
+
+
+def _scan_layers(layer, carry, stacked, cfg: LMConfig, collect_ys=False):
+    """Two-level remat scan: outer scan over L/remat_block blocks stores the
+    only boundaries; the inner scan over remat_block layers is recomputed in
+    the backward pass (activation-checkpoint policy)."""
+    L = cfg.n_layers
+    B = cfg.remat_block if cfg.remat else 1
+    if cfg.remat and L % B == 0 and B > 1 and not collect_ys:
+        blocked = jax.tree.map(
+            lambda a: a.reshape((L // B, B) + a.shape[1:]), stacked)
+
+        @jax.checkpoint
+        def block(carry, bp):
+            out, _ = jax.lax.scan(layer, carry, bp)
+            return out, None
+
+        return jax.lax.scan(block, carry, blocked)
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    return jax.lax.scan(layer_fn, carry, stacked)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def grad_cast(x, dtype_str: str):
+    """Identity whose BACKWARD casts the cotangent to `dtype_str`.
+
+    The CE loss keeps f32 logits for stable log-softmax; without a barrier
+    that f32 cotangent propagates through every layer's backward (2× HBM
+    bytes and 2× collective traffic on all seq-shard gathers — observed on
+    granite train_4k §Perf iteration 3).  Placing grad_cast before the head
+    keeps the layer-stack backward in bf16.
+    """
+    return x
+
+
+def _grad_cast_fwd(x, dtype_str):
+    return x, None
+
+
+def _grad_cast_bwd(dtype_str, _res, dx):
+    return (dx.astype(jnp.dtype(dtype_str)),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def _mask_pad_logits(logits, cfg: LMConfig):
+    """-inf on Megatron-style vocab-padding columns (no-op when unpadded)."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+
+
+def _embed_spec(ctx: DistCtx):
+    dp_entry = (ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]) if ctx.dp else None
+    return P(ctx.tp, dp_entry)
+
+
+def lm_forward(params, tokens: jnp.ndarray, cfg: LMConfig,
+               ctx: DistCtx = LOCAL_CTX):
+    """tokens [B, S] -> logits [B, S, V]; also returns aux (moe loss)."""
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens, _embed_spec(ctx), ctx.mesh,
+                     cfg.padded_vocab, str(params["embed"].dtype))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def layer(carry, lp):
+        x, aux = carry
+        x = _activation_constraint(x, cfg, ctx)
+        x, _ = _attention_block(lp, x, cfg, positions)
+        x, a = _ffn_block(lp, x, cfg, ctx)
+        x = _activation_constraint(x, cfg, ctx)
+        return (x, aux + a), None
+
+    (x, aux), _ = _scan_layers(layer, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], cfg)
+    x = grad_cast(x, cfg.dtype)  # layer-stack backward stays in param dtype
+    x = rmsnorm(x, params["ln_out"])
+    if ctx.mesh is not None:
+        # unshard the sequence before the vocab projection so logits land
+        # [B/dp, S, V/tp] (otherwise SPMD all-gathers the full f32 head)
+        dp_entry = (ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]) if ctx.dp else None
+        x = jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(ctx.mesh, P(dp_entry, None, None)))
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = _mask_pad_logits(x @ head, cfg)
+    return logits, aux / cfg.n_layers
+
+
+def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: LMConfig,
+            ctx: DistCtx = LOCAL_CTX, aux_weight: float = 0.01):
+    logits, aux = lm_forward(params, batch["tokens"], cfg, ctx)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(ll))
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "moe_aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.param_dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.d_head)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: LMConfig,
+            ctx: DistCtx = LOCAL_CTX, max_len: Optional[int] = None):
+    """Run the full prompt; returns (last-token logits, populated cache)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def layer(carry, lp):
+        x, aux = carry
+        x, (k, v) = _attention_block(lp, x, cfg, positions)
+        x, a = _ffn_block(lp, x, cfg, ctx)
+        return (x, aux + a), (k, v)
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    (x, _), (ks, vs) = jax.lax.scan(layer_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params["layers"])
+    x = rmsnorm(x[:, -1:], params["ln_out"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = _mask_pad_logits((x @ head)[:, 0], cfg)
+    pad = max_len - S
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "len": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, token: jnp.ndarray, cfg: LMConfig,
+                ctx: DistCtx = LOCAL_CTX):
+    """One decode step.  token [B] int32; cache from init_cache/prefill.
+    Returns (logits [B, V], updated cache)."""
+    B = token.shape[0]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv, cfg.d_head
+    x = jnp.take(params["embed"], token[:, None], axis=0)     # [B, 1, D]
+    pos = cache["len"]                                        # [B]
+
+    def layer(carry, xs):
+        x, aux = carry
+        lp, k_c, v_c = xs
+        h = rmsnorm(x, lp["ln_attn"])
+        q = (h @ lp["wq"]).reshape(B, 1, nkv, nh // nkv, hd)
+        k = (h @ lp["wk"]).reshape(B, 1, nkv, hd)
+        v = (h @ lp["wv"]).reshape(B, 1, nkv, hd)
+        q = apply_rope(q.reshape(B, 1, nh, hd).transpose(0, 2, 1, 3),
+                       pos[:, None, None], cfg.rope_theta
+                       ).transpose(0, 2, 1, 3).reshape(B, 1, nkv, nh // nkv, hd)
+        k = apply_rope(k.transpose(0, 2, 1, 3), pos[:, None, None],
+                       cfg.rope_theta).transpose(0, 2, 1, 3)
+        # insert new kv at position `pos` (per batch row)
+        upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0, 0)))(k_c, k[:, 0:1], pos)
+        vpd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0, 0)))(v_c, v[:, 0:1], pos)
+        o = decode_attention(q, upd, vpd, pos)
+        x = x + o.reshape(B, 1, nh * hd) @ lp["wo"]
+        x, a = _ffn_block(lp, x, cfg, ctx)
+        return (x, aux + a), (upd, vpd)
+
+    (x, _), (ks, vs) = jax.lax.scan(layer, (x, jnp.zeros((), jnp.float32)),
+                                    (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["ln_out"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = _mask_pad_logits((x @ head)[:, 0], cfg)
+    return logits, {"k": ks, "v": vs, "len": cache["len"] + 1}

@@ -1,0 +1,56 @@
+"""Embedding lookup / EmbeddingBag built from gather + segment-sum.
+
+JAX has no native EmbeddingBag; we build it from `jnp.take` +
+`jax.ops.segment_sum` (the same scatter-combine primitive as the graph
+engine).  The row-sharded distributed lookup follows the combiner-agent
+pattern: every shard computes masked partial bags from its local rows, then
+ONE `psum` merges them (instead of per-id network gathers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.05).astype(dtype)
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray, bag_ids: jnp.ndarray,
+                  num_bags: int, mode: str = "sum",
+                  weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Multi-hot bag reduce: ids [N] (flattened bag members), bag_ids [N]
+    (which bag each id belongs to), → [num_bags, D]."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, bag_ids, num_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, table.dtype), bag_ids,
+                                  num_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def sharded_embedding_lookup(table_local: jnp.ndarray, ids: jnp.ndarray,
+                             shard_index: jnp.ndarray, rows_per_shard: int,
+                             axis_name) -> jnp.ndarray:
+    """Row-sharded lookup under shard_map (combiner-agent pattern).
+
+    table_local: [rows_per_shard, D] — this shard's rows
+    ids: [...]: GLOBAL row ids (replicated across the table axis)
+    Returns [..., D] psum'd over `axis_name`.
+    """
+    lo = shard_index * rows_per_shard
+    local = ids - lo
+    hit = (local >= 0) & (local < rows_per_shard)
+    rows = jnp.take(table_local, jnp.clip(local, 0, rows_per_shard - 1),
+                    axis=0)
+    rows = jnp.where(hit[..., None], rows, 0)
+    return jax.lax.psum(rows, axis_name)

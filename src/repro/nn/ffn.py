@@ -1,0 +1,27 @@
+"""Feed-forward blocks: gated (SwiGLU / LLaMA-style) and plain MLP
+(Nemotron squared-ReLU, Cohere)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import ACTIVATIONS, dense_init
+
+
+def ffn_init(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn_apply(params, x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    act = ACTIVATIONS[activation]
+    h = x @ params["w_in"]
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ params["w_out"]

@@ -1,0 +1,66 @@
+"""Basic functional layers (params are plain pytrees; no framework)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"gamma": jnp.ones((d,), dtype), "beta": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x: jnp.ndarray, p, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["gamma"].astype(dt) + p["beta"].astype(dt)
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [{"w": dense_init(k, a, b, dtype), "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=False):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def squared_relu(x: jnp.ndarray) -> jnp.ndarray:
+    """Nemotron-4's activation (arXiv:2402.16819): relu(x)**2."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+}

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN as a Scatter-Combine instance.
+
+Token→expert dispatch IS the paper's scatter (an active message whose payload
+is the token's hidden state), and the weighted top-k merge IS the combine
+(⊕ = weighted sum).  The implementation follows the agent pattern:
+
+  * routing is computed redundantly on every expert shard (router weights
+    are replicated; tokens are replicated across the expert axis after the
+    attention all-reduce), so dispatch needs NO token movement;
+  * each expert shard computes partial outputs for the (token, expert) hits
+    it owns — the local pre-combination of a combiner agent;
+  * ONE `psum` over the expert axis merges partials — the single
+    combiner→master message.
+
+Sort-based capacity dispatch: hits are argsorted by local expert id and
+packed into a static [E_loc, C, D] buffer (overflow tokens are dropped,
+standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import ACTIVATIONS, dense_init
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, gated: bool,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d_model)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * scale).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (n_experts, d_ff, d_model)) *
+                  (1.0 / jnp.sqrt(d_ff))).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (n_experts, d_model, d_ff)) * scale).astype(dtype)
+    return p
+
+
+def moe_ffn(params, x: jnp.ndarray, top_k: int, n_experts: int,
+            capacity_factor: float = 1.25, activation: str = "silu",
+            shard_index: Optional[jnp.ndarray] = None,
+            n_shards: int = 1, axis_name=None):
+    """x: [T, D] tokens.  Expert weights in `params` hold the LOCAL shard
+    [E_loc, D, F] when running under shard_map (n_shards > 1); the router is
+    always the full [D, E] matrix.
+
+    Returns (out [T, D] — psum'd over `axis_name` if given, aux_loss scalar).
+    """
+    T, D = x.shape
+    act = ACTIVATIONS[activation]
+    e_loc = params["w_in"].shape[0]
+    assert e_loc * n_shards == n_experts, (e_loc, n_shards, n_experts)
+    my = shard_index if shard_index is not None else 0
+
+    # ---- routing (replicated across expert shards; deterministic) ----
+    logits = (x.astype(jnp.float32) @ params["router"])           # [T, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, top_k)                    # [T, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * mean(frac_tokens * frac_prob)
+    counts = jnp.zeros(n_experts).at[top_i.reshape(-1)].add(1.0)
+    aux = n_experts * jnp.mean((counts / (T * top_k)) * gates.mean(0))
+
+    # ---- scatter: pack this shard's hits into [E_loc, C, D] ----
+    flat_e = top_i.reshape(-1)                                    # [T*K]
+    flat_w = top_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    mine = (flat_e // e_loc) == my
+    le = jnp.where(mine, flat_e - my * e_loc, e_loc)              # E_loc = drop bucket
+    order = jnp.argsort(le, stable=True)
+    le_s, t_s, w_s = le[order], flat_t[order], flat_w[order]
+    seg_counts = jnp.zeros(e_loc + 1, jnp.int32).at[le_s].add(1)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(seg_counts)[:-1]])
+    pos = jnp.arange(T * top_k, dtype=jnp.int32) - offsets[le_s]
+    cap = int(max(8, round(T * top_k / n_experts * capacity_factor)))
+    keep = (le_s < e_loc) & (pos < cap)
+    tgt_e = jnp.where(keep, le_s, e_loc)
+    tgt_c = jnp.where(keep, pos, 0)
+    # Invert the (token, k) -> slot mapping FIRST with integer scatters
+    # (bytes ~ E_loc·cap ints), so the feature-dim gather/scatter below touch
+    # only the [E_loc, cap, D] capacity buffer — ~top_k× less HBM traffic
+    # than gathering x[t_s] for every (token, k) pair (§Perf iteration 1).
+    w_eff = jnp.where(keep, w_s, 0.0).astype(x.dtype)
+    tokmap = jnp.zeros((e_loc + 1, cap), jnp.int32
+                       ).at[tgt_e, tgt_c].set(t_s.astype(jnp.int32))
+    wmap = jnp.zeros((e_loc + 1, cap), x.dtype).at[tgt_e, tgt_c].set(w_eff)
+    valid = jnp.zeros((e_loc + 1, cap), bool).at[tgt_e, tgt_c].set(keep)
+    b = jnp.where(valid[:e_loc, :, None],
+                  jnp.take(x, tokmap[:e_loc], axis=0), 0)
+
+    # ---- expert compute on the packed buffer ----
+    h = jnp.einsum("ecd,edf->ecf", b, params["w_in"])
+    if "w_gate" in params:
+        h = act(jnp.einsum("ecd,edf->ecf", b, params["w_gate"])) * h
+    else:
+        h = act(h)
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_out"])            # [E_loc, C, D]
+
+    # ---- combine: weighted scatter-add back to tokens (⊕ = sum) ----
+    out = jnp.zeros((T, D), x.dtype).at[tokmap[:e_loc].reshape(-1)].add(
+        (wmap[:e_loc, :, None] * y).reshape(-1, D))
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)                        # combiner flush
+    return out, aux
+
+
+def moe_ffn_reference(params, x: jnp.ndarray, top_k: int, n_experts: int,
+                      activation: str = "silu") -> jnp.ndarray:
+    """Dense oracle: run every token through its top-k experts exactly
+    (no capacity dropping).  For tests."""
+    act = ACTIVATIONS[activation]
+    logits = x.astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    h = jnp.einsum("td,edf->tef", x, params["w_in"])
+    if "w_gate" in params:
+        h = act(jnp.einsum("td,edf->tef", x, params["w_gate"])) * h
+    else:
+        h = act(h)
+    y = jnp.einsum("tef,efd->ted", h, params["w_out"])            # [T, E, D]
+    sel = jnp.take_along_axis(y, top_i[:, :, None], axis=1)       # [T, K, D]
+    return jnp.einsum("tk,tkd->td", top_w.astype(x.dtype), sel)

@@ -1,0 +1,75 @@
+"""AdamW with global-norm clipping and schedules (functional, pytree state).
+
+Moments are kept in fp32 regardless of param dtype (mixed-precision
+training); the update casts back to the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gn = global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda mm, g: self.b1 * mm + (1 - self.b1) * g,
+                         state.m, g32)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+                         state.v, g32)
+
+        def upd(p, mm, vv):
+            mhat = mm / b1c
+            vhat = vv / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def cosine_warmup(warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return sched

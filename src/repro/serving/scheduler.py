@@ -1,0 +1,104 @@
+"""Continuous-batching serving scheduler (slot-based, vLLM-style at the
+batch level): a fixed decode batch of B slots over a static KV cache;
+incoming requests prefill into free slots while other slots keep decoding —
+no decode step ever waits for a long prompt, and the jitted step functions
+never recompile (static shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [plen] int32
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, params, cfg: LMConfig, batch_slots: int,
+                 max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.cache = tfm.init_cache(cfg, batch_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self._next_tok = np.zeros(batch_slots, np.int32)
+
+        self._prefill = jax.jit(lambda p, t: tfm.prefill(p, t, cfg,
+                                                         max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, t: tfm.decode_step(p, c, t, cfg),
+            donate_argnums=(1,))
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request):
+        assert req.prompt.shape[0] < self.max_len
+        self.queue.append(req)
+
+    def _admit(self):
+        """Fill free slots from the queue: prefill the prompt and splice its
+        KV into the slot's rows of the batch cache."""
+        for b in range(self.B):
+            if self.slot_req[b] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, pc = self._prefill(self.params, jnp.asarray(
+                req.prompt[None, :]))
+            plen = req.prompt.shape[0]
+            self.cache = {
+                "k": self.cache["k"].at[:, b].set(pc["k"][:, 0]),
+                "v": self.cache["v"].at[:, b].set(pc["v"][:, 0]),
+                "len": self.cache["len"].at[b].set(plen),
+            }
+            tok = int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            self._next_tok[b] = tok
+            self.slot_req[b] = req
+
+    def _retire(self, b: int):
+        self.slot_req[b].done = True
+        self.slot_req[b] = None
+        self.cache = {**self.cache, "len": self.cache["len"].at[b].set(0)}
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> int:
+        """Admit waiting requests, run ONE decode step for every active
+        slot, harvest finished requests.  Returns #active slots."""
+        self._admit()
+        active = [b for b in range(self.B) if self.slot_req[b] is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(self._next_tok))
+        toks = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for b in active:
+            req = self.slot_req[b]
+            tok = int(toks[b])
+            req.out.append(tok)
+            self._next_tok[b] = tok
+            length = int(self.cache["len"][b])
+            if (len(req.out) >= req.max_new
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or length >= self.max_len - 1):
+                self._retire(b)
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

@@ -1,0 +1,8 @@
+import os
+import sys
+from pathlib import Path
+
+# src-layout import without install; tests MUST see the default 1-device CPU
+# runtime (the 512-device override is dryrun.py-only by design).
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,77 @@
+"""Distributed engine == single-shard engine, on 8 simulated devices.
+
+Runs in a subprocess because the 8-device XLA_FLAGS must be set before jax
+initializes (tests themselves keep the default 1-device runtime)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "__SRC__")
+import numpy as np
+import jax
+
+from repro.graph.generators import rmat_edges
+from repro.core.engine import GREEngine, DevicePartition
+from repro.core.partition import greedy_partition
+from repro.core.agent_graph import build_agent_graph
+from repro.core.dist_engine import DistGREEngine
+from repro.core import algorithms
+
+g = rmat_edges(scale=8, edge_factor=8, seed=3, weights=True).dedup()
+k = 8
+ag = build_agent_graph(g, greedy_partition(g, k, batch_size=64), k)
+mesh = jax.make_mesh((8,), ("graph",))
+sp = DevicePartition.from_graph(g)
+
+failures = []
+for mode, overlap in (("agent", False), ("agent", True), ("dense", False)):
+    eng = DistGREEngine(algorithms.pagerank_program(), mesh, ("graph",),
+                        exchange=mode, overlap=overlap)
+    pr, _ = eng.run(ag, max_steps=20)
+    se = GREEngine(algorithms.pagerank_program())
+    st = se.run(sp, se.init_state(sp), max_steps=20)
+    if not np.allclose(pr, np.asarray(st.vertex_data), rtol=1e-4, atol=1e-4):
+        failures.append(f"pagerank {mode} overlap={overlap}")
+
+    eng = DistGREEngine(algorithms.sssp_program(), mesh, ("graph",),
+                        exchange=mode, overlap=overlap)
+    dist, _ = eng.run(ag, source=0, max_steps=300)
+    se = GREEngine(algorithms.sssp_program())
+    st = se.run(sp, se.init_state(sp, source=0), max_steps=300)
+    ref = np.asarray(st.vertex_data)
+    if not np.allclose(np.where(np.isinf(ref), -1, ref),
+                       np.where(np.isinf(dist), -1, dist)):
+        failures.append(f"sssp {mode} overlap={overlap}")
+
+# CC on the undirected graph, agent mode
+gu = g.as_undirected().dedup()
+agu = build_agent_graph(gu, greedy_partition(gu, k, batch_size=64), k)
+eng = DistGREEngine(algorithms.cc_program(), mesh, ("graph",))
+label, _ = eng.run(agu, max_steps=300)
+se = GREEngine(algorithms.cc_program())
+spu = DevicePartition.from_graph(gu)
+st = se.run(spu, se.init_state(spu), max_steps=300)
+if not np.array_equal(label, np.asarray(st.vertex_data)):
+    failures.append("cc agent")
+
+assert not failures, failures
+print("DIST_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_engine_equals_single_shard(tmp_path):
+    script = tmp_path / "dist_check.py"
+    script.write_text(SCRIPT.replace("__SRC__", SRC))
+    proc = subprocess.run([sys.executable, str(script)], capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "DIST_OK" in proc.stdout

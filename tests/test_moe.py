@@ -1,0 +1,64 @@
+"""MoE scatter-combine dispatch vs the dense no-drop oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.moe import moe_ffn, moe_ffn_reference, moe_init
+
+RNG = np.random.default_rng(2)
+
+
+@pytest.mark.parametrize("gated", [True, False])
+@pytest.mark.parametrize("t,e,k", [(64, 8, 2), (128, 16, 4), (32, 4, 1)])
+def test_moe_matches_reference_with_ample_capacity(t, e, k, gated):
+    key = jax.random.PRNGKey(0)
+    params = moe_init(key, 32, 64, e, gated)
+    x = jnp.asarray(RNG.normal(size=(t, 32)), jnp.float32)
+    out, aux = moe_ffn(params, x, k, e, capacity_factor=float(e),  # no drops
+                       activation="silu")
+    want = moe_ffn_reference(params, x, k, e, activation="silu")
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1.0 the dispatch drops overflow tokens but output
+    magnitude stays comparable (no NaN/garbage)."""
+    key = jax.random.PRNGKey(1)
+    params = moe_init(key, 16, 32, 8, True)
+    x = jnp.asarray(RNG.normal(size=(256, 16)), jnp.float32)
+    out, _ = moe_ffn(params, x, 2, 8, capacity_factor=1.0)
+    ref_out = moe_ffn_reference(params, x, 2, 8)
+    assert not bool(jnp.isnan(out).any())
+    # most tokens unaffected by drops
+    close = jnp.mean(jnp.all(jnp.abs(out - ref_out) < 1e-4, axis=-1))
+    assert float(close) > 0.5
+
+
+def test_moe_grads_flow_to_all_parts():
+    key = jax.random.PRNGKey(2)
+    params = moe_init(key, 16, 32, 4, True)
+    x = jnp.asarray(RNG.normal(size=(64, 16)), jnp.float32)
+
+    def loss(p):
+        out, aux = moe_ffn(p, x, 2, 4, capacity_factor=4.0)
+        return (out ** 2).mean() + 0.01 * aux
+
+    g = jax.grad(loss)(params)
+    for name, gr in g.items():
+        assert float(jnp.abs(gr).sum()) > 0, f"zero grad for {name}"
+
+
+def test_moe_sharded_equals_local():
+    """Simulated 1-device 'sharding': n_shards=1 with shard_index=0 must be
+    identical to the plain local call (the multi-shard case is covered by
+    the qwen/granite dry-run cells)."""
+    key = jax.random.PRNGKey(3)
+    params = moe_init(key, 16, 32, 8, True)
+    x = jnp.asarray(RNG.normal(size=(64, 16)), jnp.float32)
+    a, _ = moe_ffn(params, x, 2, 8, capacity_factor=2.0)
+    b, _ = moe_ffn(params, x, 2, 8, capacity_factor=2.0,
+                   shard_index=jnp.zeros((), jnp.int32), n_shards=1)
+    np.testing.assert_allclose(a, b, rtol=1e-6)

@@ -1,0 +1,34 @@
+"""Betweenness Centrality (paper §4.2 multi-stage extension) vs networkx."""
+import networkx as nx
+import numpy as np
+
+from repro.core.multistage import betweenness_centrality
+from repro.graph.generators import erdos_renyi_edges, grid_graph, rmat_edges
+
+
+def _check(graph, tol=1e-4):
+    nxg = nx.DiGraph()
+    nxg.add_nodes_from(range(graph.num_vertices))
+    nxg.add_edges_from(zip(graph.src.tolist(), graph.dst.tolist()))
+    want = nx.betweenness_centrality(nxg, normalized=False)
+    got = betweenness_centrality(graph)
+    ref = np.array([want[i] for i in range(graph.num_vertices)])
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol)
+
+
+def test_bc_grid():
+    _check(grid_graph(4, 5))
+
+
+def test_bc_random():
+    _check(erdos_renyi_edges(40, 160, seed=1).dedup())
+
+
+def test_bc_scale_free():
+    _check(rmat_edges(scale=6, edge_factor=4, seed=2).dedup())
+
+
+def test_bc_sampled_is_bounded():
+    g = rmat_edges(scale=8, edge_factor=8, seed=0).dedup()
+    approx = betweenness_centrality(g, sources=range(0, g.num_vertices, 8))
+    assert np.isfinite(approx).all() and (approx >= 0).all()

@@ -1,0 +1,93 @@
+"""Agent-Graph partitioning: Eq. 7-8 heuristic quality + paper §5.1 claims."""
+import numpy as np
+import pytest
+
+from repro.core.agent_graph import build_agent_graph
+from repro.core.partition import (assign_owners, greedy_partition,
+                                  hash_edge_cut, hash_partition,
+                                  partition_quality)
+from repro.graph.generators import rmat_edges
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_edges(scale=9, edge_factor=8, seed=3, weights=False).dedup()
+
+
+def test_greedy_beats_hash_on_edge_cut(graph):
+    """Fig. 11b: agent-graph equivalent edge-cut is far below the random
+    hash-sharding edge-cut (the paper's red dashed line, ≈ 1 − 1/k)."""
+    k = 8
+    q_greedy = partition_quality(graph, greedy_partition(graph, k, 16))
+    cut_hash = hash_edge_cut(graph, k)
+    assert cut_hash > 0.8  # sanity: 1 - 1/8 = 0.875
+    assert q_greedy.equivalent_edge_cut < 0.5 * cut_hash  # paper: 2~11x
+
+
+def test_edge_balance_constraint(graph):
+    """Eq. 7: max partition load within (1+eps) of mean."""
+    k = 8
+    q = partition_quality(graph, greedy_partition(graph, k, 64))
+    assert q.edge_balance < 1.5
+
+
+def test_agent_comm_leq_vertexcut(graph):
+    """Paper §5.1: |Vs| + |Vc| <= 2R — agent exchange never sends more than
+    PowerGraph's mirror synchronization for the SAME placement."""
+    for k in (2, 4, 8):
+        part = greedy_partition(graph, k, 64)
+        q = partition_quality(graph, part)
+        assert q.agent_comm <= q.vertexcut_comm
+
+
+def test_scatter_combiner_skew_on_fan_in_graph(graph):
+    """Fig. 12b/13b: scatter/combiner rates are skewed (the phenomenon
+    PowerGraph's symmetric mirrors cannot represent)."""
+    q = partition_quality(graph, greedy_partition(graph, 8, 64))
+    assert abs(q.scatter_rate - 0.5) > 0.05
+
+
+def test_partition_deterministic(graph):
+    p1 = greedy_partition(graph, 4, 64, seed=7)
+    p2 = greedy_partition(graph, 4, 64, seed=7)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_exact_serial_stream_mode(graph):
+    """batch_size=1 (exact GRE-S serial stream) beats both the hash edge-cut
+    and the batched GRE-P approximation (paper Fig. 12a ordering)."""
+    small = rmat_edges(scale=7, edge_factor=6, seed=5).dedup()
+    q_s = partition_quality(small, greedy_partition(small, 4, batch_size=1))
+    q_p = partition_quality(small, greedy_partition(small, 4, batch_size=64))
+    assert q_s.equivalent_edge_cut < hash_edge_cut(small, 4)
+    assert q_s.equivalent_edge_cut <= q_p.equivalent_edge_cut * 1.1
+
+
+def test_agent_graph_structure(graph):
+    k = 4
+    part = greedy_partition(graph, k, 64)
+    ag = build_agent_graph(graph, part, k)
+    # every real edge appears exactly once across partitions
+    assert int(ag.edge_mask.sum()) == graph.num_edges
+    # local ids in range
+    assert ag.src.max() <= ag.sink and ag.dst.max() <= ag.sink
+    # id mapping is a bijection on real vertices
+    assert np.array_equal(np.sort(ag.old2new), np.flatnonzero(
+        np.isin(np.arange(ag.k * ag.cap), ag.old2new)))
+    back = ag.new2old[ag.old2new]
+    np.testing.assert_array_equal(back, np.arange(graph.num_vertices))
+    # exchange lists pair up: every (i -> j) combiner send has a matching
+    # master slot recorded on j, same multiplicity
+    sink = ag.sink
+    for i in range(k):
+        for j in range(k):
+            n_send = int((ag.comb_send_slot[i, j] != sink).sum())
+            n_recv = int((ag.comb_recv_master[j, i] != sink).sum())
+            assert n_send == n_recv
+
+
+def test_owner_assignment_covers_all(graph):
+    part = greedy_partition(graph, 4, 64)
+    owner = assign_owners(graph, part, 4)
+    assert owner.shape == (graph.num_vertices,)
+    assert owner.min() >= 0 and owner.max() < 4

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import greedy_partition, hash_partition, partition_quality
+from repro.core.vertex_program import MONOIDS, segment_combine
+from repro.graph.generators import erdos_renyi_edges
+from repro.graph.structures import Graph
+from repro.optim import compression
+
+
+# ---------------------------------------------------------------- ⊕ monoid
+@settings(max_examples=30, deadline=None)
+@given(e=st.integers(1, 300), v=st.integers(1, 100),
+       op=st.sampled_from(["sum", "min", "max"]), seed=st.integers(0, 9999))
+def test_combine_is_permutation_invariant(e, v, op, seed):
+    """Paper §2.2's key fact: ⊕ commutative+associative ⇒ message arrival
+    order cannot change the result (what lets GRE drop vLock on TPU)."""
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    msgs = jnp.asarray(rng.normal(size=(e,)), jnp.float32)
+    perm = rng.permutation(e)
+    m = MONOIDS[op]
+    a = segment_combine(msgs, jnp.asarray(dst), v, m)
+    b = segment_combine(msgs[perm], jnp.asarray(dst[perm]), v, m)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(e=st.integers(2, 200), v=st.integers(1, 50), seed=st.integers(0, 9999))
+def test_combine_is_two_level_associative(e, v, seed):
+    """Agent-graph exactness: combining per-partition partials then combining
+    the partials equals the flat combine (⊕ associativity, §5.1)."""
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    msgs = jnp.asarray(rng.normal(size=(e,)), jnp.float32)
+    m = MONOIDS["sum"]
+    flat = segment_combine(msgs, jnp.asarray(dst), v, m)
+    half = e // 2
+    p1 = segment_combine(msgs[:half], jnp.asarray(dst[:half]), v, m)
+    p2 = segment_combine(msgs[half:], jnp.asarray(dst[half:]), v, m)
+    np.testing.assert_allclose(np.asarray(p1 + p2), np.asarray(flat),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- partitioning
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(16, 128), m=st.integers(32, 512),
+       k=st.sampled_from([2, 4, 8]), seed=st.integers(0, 999))
+def test_partition_invariants(n, m, k, seed):
+    g = erdos_renyi_edges(n, m, seed=seed).dedup()
+    if g.num_edges == 0:
+        return
+    part = greedy_partition(g, k, batch_size=32, seed=seed)
+    assert part.min() >= 0 and part.max() < k
+    q = partition_quality(g, part)
+    # §5.1 bound holds on EVERY graph, not just scale-free ones
+    assert q.agent_comm <= q.vertexcut_comm
+    assert 0.0 <= q.equivalent_edge_cut <= 2.0
+    assert q.num_scatters + q.num_combiners == q.agent_comm
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(16, 100), m=st.integers(16, 256), seed=st.integers(0, 99))
+def test_agent_graph_runs_any_graph(n, m, seed):
+    """Engine correctness is topology-independent: random graphs, k=2."""
+    from repro.core import algorithms
+    from repro.core.agent_graph import build_agent_graph
+    from repro.core.engine import DevicePartition, GREEngine
+
+    g = erdos_renyi_edges(n, m, seed=seed).dedup()
+    if g.num_edges < 2:
+        return
+    part = greedy_partition(g, 2, batch_size=16, seed=seed)
+    ag = build_agent_graph(g, part, 2)
+    assert int(ag.edge_mask.sum()) == g.num_edges
+    # single-shard oracle still exact on this graph
+    sp = DevicePartition.from_graph(g)
+    eng = GREEngine(algorithms.pagerank_program())
+    out = eng.run(sp, eng.init_state(sp), max_steps=5)
+    assert not bool(jnp.isnan(out.vertex_data).any())
+
+
+# ----------------------------------------------------------- compression
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 500), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 9999))
+def test_error_feedback_bounds_quantization(n, scale, seed):
+    """Single-step int8 quantization error <= 1 quantum; the residual is
+    carried forward exactly (error feedback invariant)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)}
+    e0 = compression.init_error(g)
+    q, s, e1 = compression.compress(g, e0)
+    deq = compression.decompress(q, s)
+    err = np.asarray(g["w"] - deq["w"])
+    quantum = float(s["w"])
+    assert np.all(np.abs(err) <= quantum * (0.5 + 1e-5))
+    np.testing.assert_allclose(np.asarray(e1["w"]), err, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_error_feedback_mean_converges(seed):
+    """Accumulated dequantized signal tracks the true sum (EF property)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    err = compression.init_error(g)
+    acc = np.zeros(64)
+    for _ in range(20):
+        q, s, err = compression.compress(g, err)
+        acc += np.asarray(compression.decompress(q, s)["w"])
+    np.testing.assert_allclose(acc / 20, np.asarray(g["w"]),
+                               rtol=0.02, atol=0.02)

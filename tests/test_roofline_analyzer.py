@@ -1,0 +1,78 @@
+"""The HLO roofline analyzer: trip-count awareness + flop accounting."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import roofline as rl
+
+
+def _analyze(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return rl.analyze(compiled.as_text())
+
+
+def test_plain_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    res = _analyze(lambda a, b: a @ b, a, b)
+    want = 2 * 256 * 512 * 128
+    assert res["flops_per_device"] == pytest.approx(want, rel=0.01)
+
+
+def test_scan_body_multiplied_by_trip_count():
+    """The whole reason this analyzer exists: XLA cost_analysis counts a
+    while body once; ours multiplies by the parsed trip count."""
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+
+    def make(n):
+        def fn(w, x):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=n)
+            return out
+        return fn
+
+    f4 = _analyze(make(4), w, x)["flops_per_device"]
+    f16 = _analyze(make(16), w, x)["flops_per_device"]
+    assert f16 / f4 == pytest.approx(4.0, rel=0.1)
+    per_layer = 2 * 8 * 128 * 128
+    assert f16 == pytest.approx(16 * per_layer, rel=0.2)
+
+
+def test_nested_scan_trip_counts_compose():
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+
+    def fn(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    res = _analyze(fn, w, x)
+    want = 5 * 3 * 2 * 4 * 64 * 64
+    assert res["flops_per_device"] == pytest.approx(want, rel=0.2)
+
+
+def test_shape_parsing():
+    assert rl.shape_bytes("f32[16,4]{1,0}") == 256
+    assert rl.shape_bytes("bf16[8]{0}") == 16
+    assert rl.shape_bytes("(f32[4]{0}, s32[2]{0})") == 24
+    assert rl.shape_elems("f32[3,5]{1,0}") == 15
+    assert rl.shape_bytes("pred[7]{0}") == 7
+
+
+def test_dominant_term_and_times():
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    res = _analyze(lambda a: a @ a, a)
+    assert res["dominant"] in ("compute", "memory", "collective")
+    assert res["bound_time_s"] == max(res["compute_time_s"],
+                                      res["memory_time_s"],
+                                      res["collective_time_s"])
+    assert res["link_bytes_per_device"] == 0  # single device: no collectives
