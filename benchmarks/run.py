@@ -2,13 +2,15 @@
 
   python -m benchmarks.run            # all
   python -m benchmarks.run pagerank   # one
+  python -m benchmarks.run --smoke    # CI: one tiny config per suite
 
 Output: ``name,us_per_call,derived`` CSV on stdout.
 """
 import sys
 
 from benchmarks import (bench_gas_vs_sc, bench_memory, bench_pagerank,
-                        bench_partition, bench_traversal, bench_weak)
+                        bench_partition, bench_traversal, bench_vector_combine,
+                        bench_weak)
 
 SUITES = {
     "pagerank": bench_pagerank.main,     # Table 5 / Fig. 8a-b
@@ -17,11 +19,31 @@ SUITES = {
     "partition": bench_partition.main,   # Fig. 11/12/13 + §5.1
     "memory": bench_memory.main,         # §7.1.2 memory claim
     "gas_vs_sc": bench_gas_vs_sc.main,   # §2.2 motivation
+    "vector": bench_vector_combine.main, # D=64 feature-vector payloads
+}
+
+# Reduced-scale configs for the CI smoke run (seconds, not minutes); suites
+# without an entry fall back to their full run.
+SMOKE = {
+    "pagerank": lambda: bench_pagerank.run(scale=8, iters=2),
+    "vector": lambda: bench_vector_combine.run(scale=8, d_feat=64, iters=2),
 }
 
 
 def main() -> None:
-    wanted = sys.argv[1:] or list(SUITES)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    if smoke:
+        args.remove("--smoke")
+    wanted = args or list(SMOKE if smoke else SUITES)
+    unknown = [n for n in wanted if n not in SUITES]
+    if unknown:
+        sys.exit(f"unknown suite(s) {unknown}; choose from {list(SUITES)}")
+    if smoke:
+        print("name,us_per_call,derived")
+        for name in wanted:
+            SMOKE.get(name, SUITES[name])()
+        return
     print("name,us_per_call,derived")
     for name in wanted:
         SUITES[name]()

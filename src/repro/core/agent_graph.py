@@ -83,12 +83,20 @@ def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
 
 def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
                       owner: Optional[np.ndarray] = None,
-                      pad_multiple: int = 8) -> AgentGraph:
+                      pad_multiple: int = 8,
+                      transpose: bool = False) -> AgentGraph:
+    """`transpose=True` builds the agent graph of the REVERSED edge set
+    (paper §4.2: backward traversal for multi-stage algorithms) while
+    keeping the same edge partition and master placement (owners are
+    assigned on the FORWARD graph), so forward and backward stages share
+    vertex ownership and results relabel identically stage to stage."""
+    if owner is None:
+        owner = assign_owners(graph, edge_part, k)
+    if transpose:
+        graph = graph.reversed()   # same edge indices, endpoints swapped
     V, E = graph.num_vertices, graph.num_edges
     cap = -(-V // k)
     cap = -(-cap // pad_multiple) * pad_multiple
-    if owner is None:
-        owner = assign_owners(graph, edge_part, k)
     owner = rebalance_owners(owner, k, cap)
 
     # contiguous relabeling: partition i owns global ids [i*cap, i*cap+n_i)

@@ -1,116 +1,78 @@
-"""Distributed GRE engine: Scatter-Combine over Agent-Graph via shard_map.
+"""Distributed GRE engine: the canonical superstep under shard_map.
 
-Each device owns one agent-graph partition (masters + agents + edge shard).
-A distributed superstep is (paper §4-5, adapted to TPU collectives):
+Each device owns one agent-graph partition (masters + agents + edge shard)
+and runs `GREEngine.superstep` — the SAME code path as the single-shard
+engine — with a pluggable ExchangeBackend supplying the communication:
 
-  1. scatter refresh  — every master pushes (scatter_data, active) to its
-     remote scatter agents: ONE message per (master, partition) pair, an
-     `all_to_all` over static per-peer slot lists.
-  2. local scatter-combine — the fused gather → message → segment-reduce
-     over the local edge shard; destinations are local masters (direct) or
-     combiner slots (pre-reduction of remote-bound messages).
-  3. combine flush   — each combiner sends ONE ⊕-reduced message to its
-     master: an `all_to_all` + a second segment-combine at the owner
-     (exactness from ⊕ associativity, paper §2.2).
-  4. apply           — masters fold combine_data into vertex_data and
-     assert_to_halt.
+  exchange="agent"  → AgentExchange: scatter refresh (ONE message per
+      (master, peer) pair) before the local fused scatter-combine, combiner
+      flush (ONE ⊕-reduced message per agent) after it.  Total traffic per
+      superstep = |V_s| + |V_c| messages — the paper's §5.1 bound, strictly
+      ≤ vertex-cut's 2R.  `overlap=True` issues the remote-destined flush
+      before local-destined edges compute (§6.2's "override network
+      communication with useful computation", as an XLA scheduling hint).
+  exchange="dense"  → DenseExchange: hash-partition/Pregel baseline, a
+      collective ⊕ over the full relabeled vertex vector; used as the
+      communication baseline in benchmarks and rooflines.
 
-Total network traffic per superstep = |V_s| + |V_c| messages — the paper's
-§5.1 bound, strictly ≤ vertex-cut's 2R.  A dense fallback (`exchange=
-"dense"`) implements the hash-partition/Pregel-style alternative: a psum
-over the full relabeled vertex vector; it is used as the communication
-baseline in benchmarks and rooflines.
-
-Overlap (beyond-paper): `overlap=True` splits the local edge shard into
-remote-destined and local-destined halves; the combine flush for the remote
-half is issued before the local half computes, letting XLA overlap the
-all_to_all with local compute (the TPU analogue of §6.2's "override network
-communication with useful computation").
+This module owns only backend selection, host→device topology layout, and
+state relabeling; all superstep logic lives in engine.py/exchange.py.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.agent_graph import AgentGraph
 from repro.core.engine import DevicePartition, EngineState, GREEngine
-from repro.core.vertex_program import VertexProgram, segment_combine
+from repro.core.exchange import (AgentExchange, DenseExchange, NullExchange,
+                                 ShardTopology, flush_combiners,
+                                 refresh_scatter_agents)
+from repro.core.vertex_program import VertexProgram
+from repro.dist.sharding import shard_map
 
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class ShardTopology:
-    """Device-local (inside shard_map) view of one AgentGraph partition."""
-
-    part: DevicePartition          # local slots + edges
-    comb_send_slot: jnp.ndarray    # [k, x_pad]
-    comb_recv_master: jnp.ndarray  # [k, x_pad]
-    scat_send_master: jnp.ndarray  # [k, x_pad]
-    scat_recv_slot: jnp.ndarray    # [k, x_pad]
-
-
-def refresh_scatter_agents(topo: "ShardTopology", scatter_data: jnp.ndarray,
-                           active: jnp.ndarray, axes, identity,
-                           dense: bool = False):
-    """Exchange 1 (master → scatter agent): ONE message per (master, peer).
-
-    Works for scalar or feature-vector `scatter_data` ([slots] or
-    [slots, D...]).  Returns refreshed (scatter_data, active).  With
-    `dense=True` (iterative programs: every vertex active) the activity
-    payload is skipped — half the exchange ops.
-    """
-    vals = jnp.take(scatter_data, topo.scat_send_master, axis=0)   # [k, x, *F]
-    rec_v = jax.lax.all_to_all(vals, axes, split_axis=0, concat_axis=0,
-                               tiled=True)
-    slots = topo.scat_recv_slot.reshape(-1)
-    flat_v = rec_v.reshape((-1,) + rec_v.shape[2:])
-    sd = scatter_data.at[slots].set(flat_v.astype(scatter_data.dtype),
-                                    mode="drop")
-    if dense:
-        return sd, active
-    acts = jnp.take(active, topo.scat_send_master, axis=0)         # [k, x]
-    rec_a = jax.lax.all_to_all(acts, axes, split_axis=0, concat_axis=0,
-                               tiled=True)
-    act = active.at[slots].set(rec_a.reshape(-1), mode="drop")
-    return sd, act
-
-
-def flush_combiners(topo: "ShardTopology", combined: jnp.ndarray, axes,
-                    monoid):
-    """Exchange 2 (combiner → master): ONE ⊕-reduced value per agent.
-
-    Returns a [num_slots, *F] array of remote contributions folded into
-    local master slots (identity elsewhere).
-    """
-    vals = jnp.take(combined, topo.comb_send_slot, axis=0)          # [k, x, *F]
-    rec = jax.lax.all_to_all(vals, axes, split_axis=0, concat_axis=0,
-                             tiled=True)
-    flat = rec.reshape((-1,) + rec.shape[2:])
-    return segment_combine(flat.astype(combined.dtype),
-                           topo.comb_recv_master.reshape(-1),
-                           topo.part.num_slots, monoid)
+__all__ = ["DistGREEngine", "ShardTopology", "flush_combiners",
+           "refresh_scatter_agents"]
 
 
 class DistGREEngine:
     """Runs a VertexProgram over an AgentGraph on a device mesh."""
 
+    EXCHANGES = ("agent", "dense", "null")
+
     def __init__(self, program: VertexProgram, mesh: Mesh,
                  axis_names: Tuple[str, ...] = ("graph",),
                  exchange: str = "agent", overlap: bool = False,
                  use_pallas: bool = False):
-        assert exchange in ("agent", "dense")
+        assert exchange in self.EXCHANGES, exchange
+        # NullExchange never communicates: correct only on a 1-device mesh
+        # (useful to A/B the shard_map plumbing against GREEngine).
+        assert exchange != "null" or mesh.size == 1, \
+            "exchange='null' drops all cross-shard traffic; needs a 1-device mesh"
         self.program = program
         self.mesh = mesh
         self.axes = axis_names
         self.exchange = exchange
         self.overlap = overlap
         self.local = GREEngine(program, use_pallas=use_pallas)
+
+    # ------------------------------------------------------ backend selection
+    def make_exchange(self, topo: ShardTopology):
+        """Instantiate the configured ExchangeBackend for one device's
+        topology (called inside shard_map; `my_row` is the mesh position)."""
+        if self.exchange == "null":
+            return NullExchange()
+        if self.exchange == "dense":
+            return DenseExchange(topo, self.axes, self.program.monoid,
+                                 my_row=jax.lax.axis_index(self.axes),
+                                 dense_frontier=self.local.dense_frontier)
+        return AgentExchange(topo, self.axes, self.program.monoid,
+                             dense_frontier=self.local.dense_frontier,
+                             overlap=self.overlap)
 
     # ----------------------------------------------------------- host → device
     def device_topology(self, ag: AgentGraph):
@@ -141,9 +103,10 @@ class DistGREEngine:
                "global_id": jnp.asarray(
                    ag.new2old.reshape(k, cap).astype(np.float32))}
         vd = jax.vmap(lambda a: p.init_vertex_data(cap, a))(aux)
-        sd = jnp.full((k, slots), p.monoid.identity, p.msg_dtype)
-        sd = sd.at[:, :cap].set(
-            jax.vmap(lambda a: p.init_scatter_data(cap, a))(aux))
+        sd0 = jax.vmap(lambda a: jnp.asarray(p.init_scatter_data(cap, a),
+                                             p.msg_dtype))(aux)
+        sd = jnp.full((k, slots) + sd0.shape[2:], p.monoid.identity,
+                      p.msg_dtype).at[:, :cap].set(sd0)
         act = jnp.zeros((k, slots), dtype=bool)
         act = act.at[:, :cap].set(
             jax.vmap(lambda a: p.init_active(cap, a))(aux))
@@ -158,94 +121,10 @@ class DistGREEngine:
             act = jnp.zeros_like(act).at[i, s].set(True)
         return EngineState(vd, sd, act, jnp.zeros((k,), jnp.int32))
 
-    # -------------------------------------------------------- shard-local step
-    def _refresh_scatter_agents(self, topo: ShardTopology, state: EngineState):
-        """Exchange 1: master → scatter agent (value, active)."""
-        sd, act = refresh_scatter_agents(topo, state.scatter_data,
-                                         state.active_scatter, self.axes,
-                                         self.program.monoid.identity,
-                                         dense=self.local.dense_frontier)
-        return EngineState(state.vertex_data, sd, act, state.step)
-
-    def _flush_combiners(self, topo: ShardTopology, combined: jnp.ndarray):
-        """Exchange 2: combiner → master, ONE ⊕-reduced value per agent."""
-        return flush_combiners(topo, combined, self.axes, self.program.monoid)
-
-    def _superstep_shard(self, topo: ShardTopology, state: EngineState
-                         ) -> EngineState:
-        p = self.program
-        monoid = p.monoid
-        state = self._refresh_scatter_agents(topo, state)
-        if self.overlap:
-            # remote-destined edges first; their flush overlaps local compute
-            part = topo.part
-            is_remote = part.dst >= part.num_masters + 0  # combiners live high
-            remote_dst = jnp.where(is_remote, part.dst, part.num_slots - 1)
-            local_dst = jnp.where(is_remote, part.num_slots - 1, part.dst)
-            remote_part = dataclasses.replace(part, dst=remote_dst,
-                                              edges_sorted_by_dst=False)
-            local_part = dataclasses.replace(part, dst=local_dst,
-                                             edges_sorted_by_dst=False)
-            combined_remote = self.local.scatter_combine(remote_part, state)
-            flushed = self._flush_combiners(topo, combined_remote)
-            combined_local = self.local.scatter_combine(local_part, state)
-            combined = monoid.op(combined_local, flushed)
-        else:
-            combined = self.local.scatter_combine(topo.part, state)
-            flushed = self._flush_combiners(topo, combined)
-            # master slots take direct local + flushed remote contributions
-            combined = monoid.op(
-                jnp.where(jnp.arange(combined.shape[0]) < topo.part.num_masters,
-                          combined, monoid.identity),
-                flushed)
-        return self.local.apply(topo.part, state, combined)
-
-    def _superstep_dense(self, topo: ShardTopology, state: EngineState,
-                         my_row: jnp.ndarray) -> EngineState:
-        """Baseline exchange: psum over the full relabeled vertex vector."""
-        p = self.program
-        state = self._refresh_scatter_agents(topo, state)
-        k = jax.lax.psum(1, self.axes)
-        cap = topo.part.num_masters
-        combined_loc = self.local.scatter_combine(topo.part, state)
-        # project local slots back to global master vector [k*cap]
-        myslice = my_row * cap
-        global_vec = jnp.full((k * cap,), p.monoid.identity, p.msg_dtype)
-        global_vec = global_vec.at[myslice + jnp.arange(cap)].set(
-            combined_loc[:cap])
-        # combiner slots map to their global master id via recv lists? dense
-        # mode instead scatters combiner values into the global vector.
-        comb_vals = jnp.take(combined_loc, topo.comb_send_slot, axis=0,
-                             fill_value=p.monoid.identity)   # [k, x]
-        tgt = (jnp.arange(k)[:, None] * cap +
-               jax.lax.all_to_all(topo.comb_recv_master, self.axes, 0, 0,
-                                  tiled=True))
-        sink_mask = jax.lax.all_to_all(
-            topo.comb_recv_master, self.axes, 0, 0, tiled=True) >= cap
-        tgt = jnp.where(sink_mask, k * cap, tgt)  # drop padding
-        global_vec = segment_combine(
-            jnp.concatenate([global_vec, comb_vals.reshape(-1)]),
-            jnp.concatenate([jnp.arange(k * cap), tgt.reshape(-1)]),
-            k * cap + 1, p.monoid)[:k * cap]
-        if p.monoid.name == "sum":
-            total = jax.lax.psum(global_vec, self.axes)
-        elif p.monoid.name == "min":
-            total = jax.lax.pmin(global_vec, self.axes)
-        else:
-            total = jax.lax.pmax(global_vec, self.axes)
-        mine = jax.lax.dynamic_slice(total, (myslice,), (cap,))
-        combined = jnp.full((topo.part.num_slots,), p.monoid.identity,
-                            p.msg_dtype).at[:cap].set(mine)
-        return self.local.apply(topo.part, state, combined)
-
     # ------------------------------------------------------------------- run
     def make_run(self, ag: AgentGraph, max_steps: int = 100):
         """Build the jitted distributed run function over the mesh."""
-        topo = self.device_topology(ag)
         spec_leading = P(self.axes if len(self.axes) > 1 else self.axes[0])
-        shard = partial(jax.shard_map, mesh=self.mesh,
-                        in_specs=(spec_leading, spec_leading),
-                        out_specs=spec_leading, check_vma=False)
 
         def squeeze0(tree):
             return jax.tree.map(lambda a: a[0] if hasattr(a, "ndim") and a.ndim > 0 else a, tree)
@@ -253,11 +132,10 @@ class DistGREEngine:
         def unsqueeze0(tree):
             return jax.tree.map(lambda a: a[None] if hasattr(a, "ndim") else a, tree)
 
-        @shard
         def run_shard(topo_stack, state_stack):
             topo_l = squeeze0(topo_stack)
             state_l = squeeze0(state_stack)
-            my_row = jax.lax.axis_index(self.axes)
+            backend = self.make_exchange(topo_l)
 
             def cond(s):
                 any_active = jnp.any(s.active_scatter)
@@ -265,14 +143,15 @@ class DistGREEngine:
                 return (s.step < max_steps) & (glob > 0)
 
             def body(s):
-                if self.exchange == "dense":
-                    return self._superstep_dense(topo_l, s, my_row)
-                return self._superstep_shard(topo_l, s)
+                return self.local.superstep(topo_l.part, s, backend)
 
             out = jax.lax.while_loop(cond, body, state_l)
             return unsqueeze0(out)
 
-        return jax.jit(run_shard)
+        sharded = shard_map(run_shard, mesh=self.mesh,
+                            in_specs=(spec_leading, spec_leading),
+                            out_specs=spec_leading)
+        return jax.jit(sharded)
 
     def run(self, ag: AgentGraph, source: Optional[int] = None,
             max_steps: int = 100) -> Tuple[np.ndarray, EngineState]:

@@ -1,15 +1,25 @@
 """GRE BSP engine: executes VertexPrograms in supersteps (paper Alg. 2).
 
-Single-shard engine.  Each superstep runs two phases:
+There is ONE canonical superstep, parameterized by an ExchangeBackend
+(`repro.core.exchange`):
 
-  scatter-combine — every scatter-active vertex emits active messages along
+  refresh          — the backend pushes master scatter state to any remote
+      readers (identity on a single shard);
+  scatter-combine  — every scatter-active vertex emits active messages along
       its out-edges; messages execute ⊕ at their destinations immediately
       (one fused gather → message → segment-reduce, no edge-state storage);
-  apply — every vertex whose combine_data changed recomputes vertex_data and
-      decides whether to stay scatter-active (assert_to_halt).
+      the backend folds remote partial combines into master slots;
+  apply            — every vertex whose combine_data changed recomputes
+      vertex_data and decides whether to stay scatter-active
+      (assert_to_halt).
 
-The distributed engine (`repro.core.dist_engine`) reuses `superstep` on each
-shard's local slots and inserts the Agent-Graph exchange in between.
+Message payloads are first-class feature vectors: state arrays are
+`[slots, *payload_shape]` and the same superstep drives scalar traversal
+(SSSP, payload `()`), multi-stage vector programs (Brandes σ, payload
+`(3,)`) and GNN feature aggregation (payload `(D,)`).
+
+The distributed engine (`repro.core.dist_engine`) runs this same superstep
+per shard with an AgentExchange or DenseExchange backend under shard_map.
 """
 from __future__ import annotations
 
@@ -21,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.exchange import NULL_EXCHANGE, ExchangeBackend
 from repro.core.vertex_program import VertexProgram, segment_combine
 
 
@@ -45,9 +56,17 @@ class DevicePartition:
     aux: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
 
     @staticmethod
-    def from_graph(graph, pad_to: Optional[int] = None, sort_by_dst: bool = True):
-        """Whole graph on one shard (no agents; slots = V + sink)."""
+    def from_graph(graph, pad_to: Optional[int] = None,
+                   sort_by_dst: bool = True, transpose: bool = False):
+        """Whole graph on one shard (no agents; slots = V + sink).
+
+        `transpose=True` builds the partition of the reversed graph — the
+        backward-traversal substrate for multi-stage algorithms (paper §4.2:
+        Brandes' δ accumulation runs on the transposed graph).
+        """
         from repro.graph.structures import pad_edges, sort_edges_by_dst
+        if transpose:
+            graph = graph.reversed()
         src, dst, props = graph.src, graph.dst, dict(graph.edge_props)
         if sort_by_dst:
             src, dst, props, _ = sort_edges_by_dst(src, dst, props)
@@ -71,8 +90,8 @@ class DevicePartition:
 class EngineState:
     """Runtime vertex states (paper §6.1.3), flat column arrays per slot."""
 
-    vertex_data: jnp.ndarray     # [num_masters, ...]
-    scatter_data: jnp.ndarray    # [num_slots, ...] (agents hold forwarded copies)
+    vertex_data: jnp.ndarray     # [num_masters, *V]
+    scatter_data: jnp.ndarray    # [num_slots, *S] (agents hold forwarded copies)
     active_scatter: jnp.ndarray  # [num_slots] bool
     step: jnp.ndarray            # scalar int32 superstep counter
 
@@ -97,9 +116,9 @@ class GREEngine:
         p = self.program
         n, s = part.num_masters, part.num_slots
         vertex_data = p.init_vertex_data(n, part.aux)
-        scatter_full = jnp.full((s,) + vertex_data.shape[1:],
-                                p.monoid.identity, p.msg_dtype)
-        scatter_data = scatter_full.at[:n].set(p.init_scatter_data(n, part.aux))
+        sd0 = jnp.asarray(p.init_scatter_data(n, part.aux), p.msg_dtype)
+        scatter_data = jnp.full((s,) + sd0.shape[1:], p.monoid.identity,
+                                p.msg_dtype).at[:n].set(sd0)
         active = jnp.zeros(s, dtype=bool).at[:n].set(p.init_active(n, part.aux))
         if source is not None:
             vertex_data = vertex_data.at[source].set(0.0)
@@ -114,8 +133,7 @@ class GREEngine:
         """Phase 1: active messages on all out-edges of active vertices.
 
         Returns the ⊕-accumulated combine_data over `num_segments` slots
-        (defaults to all local slots; the distributed engine combines into
-        masters+combiners and exchanges afterwards).
+        ([num_segments, *payload_shape]; defaults to all local slots).
         """
         p = self.program
         eprop = (part.edge_props[p.needs_edge_prop]
@@ -139,13 +157,20 @@ class GREEngine:
     # ------------------------------------------------------------------ apply
     def apply(self, part: DevicePartition, state: EngineState,
               combined: jnp.ndarray) -> EngineState:
-        """Phase 2: fold combine_data into vertex_data; assert_to_halt."""
+        """Phase 2: fold combine_data into vertex_data; assert_to_halt.
+
+        `aux` reaching apply_fn carries the superstep counter under "step" —
+        level-synchronous programs (Brandes' backward δ) schedule themselves
+        off it without bespoke drivers.
+        """
         p = self.program
         n = part.num_masters
         combined_m = combined[:n]
+        aux = dict(part.aux)
+        aux["step"] = state.step
         act_apply = p.combine_activates(state.vertex_data, combined_m)
         new_vd, new_sd, act_scatter = p.apply_fn(state.vertex_data,
-                                                 combined_m, part.aux)
+                                                 combined_m, aux)
         bva = act_apply.reshape(act_apply.shape + (1,) * (new_vd.ndim - act_apply.ndim))
         vertex_data = jnp.where(bva, new_vd, state.vertex_data)
         bsa = act_apply.reshape(act_apply.shape + (1,) * (new_sd.ndim - act_apply.ndim))
@@ -154,13 +179,21 @@ class GREEngine:
                       state.scatter_data[:n]))
         if p.halts:  # traversal: only improved vertices scatter next round
             next_active = act_apply & act_scatter
-        else:        # iterative: every master keeps scattering
+        else:        # iterative: activity is whatever apply asserts
             next_active = act_scatter
         active = jnp.zeros_like(state.active_scatter).at[:n].set(next_active)
         return EngineState(vertex_data, scatter_data, active, state.step + 1)
 
-    def superstep(self, part: DevicePartition, state: EngineState) -> EngineState:
-        return self.apply(part, state, self.scatter_combine(part, state))
+    # ------------------------------------------------------------- superstep
+    def superstep(self, part: DevicePartition, state: EngineState,
+                  exchange: ExchangeBackend = NULL_EXCHANGE) -> EngineState:
+        """THE superstep: refresh → scatter-combine/reduce → apply.
+
+        Single-shard and distributed execution differ only in `exchange`.
+        """
+        state = exchange.refresh(state)
+        combined = exchange.reduce(self, part, state)
+        return self.apply(part, state, combined)
 
     # -------------------------------------------------------------------- run
     @partial(jax.jit, static_argnums=(0, 3))

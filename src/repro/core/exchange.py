@@ -1,0 +1,224 @@
+"""ExchangeBackend: the pluggable communication substrate of the engine.
+
+The GRE computation model (paper §4, Alg. 2) is one canonical superstep —
+refresh scatter state, fused scatter-combine, apply — independent of HOW
+partial combines cross device boundaries.  This module isolates that seam:
+
+  NullExchange   — single shard: every destination is local, nothing moves.
+  AgentExchange  — the paper's Agent-Graph (§5): masters push ONE message per
+                   (master, peer) to scatter agents before the local phase;
+                   combiners push ONE ⊕-reduced message per agent to their
+                   master after it.  |V_s| + |V_c| messages per superstep.
+                   `overlap=True` issues the flush for remote-destined edges
+                   before local-destined edges compute (§6.2's communication/
+                   computation overlap, as an XLA scheduling hint).
+  DenseExchange  — hash-partition/Pregel baseline: ⊕-reduce the full
+                   relabeled vertex vector with a collective (psum/pmin/pmax).
+
+All three speak first-class feature-vector payloads: state and message
+arrays are `[slots, *payload_shape]`; scalars are the `payload_shape=()`
+special case.  Backends are plain callables on jnp arrays, usable inside
+`shard_map` (Agent/Dense) or outside any mesh (Null).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex_program import Monoid, segment_combine
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a cycle
+    from repro.core.engine import DevicePartition, EngineState, GREEngine
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardTopology:
+    """Device-local (inside shard_map) view of one AgentGraph partition."""
+
+    part: "DevicePartition"        # local slots + edges
+    comb_send_slot: jnp.ndarray    # [k, x_pad]
+    comb_recv_master: jnp.ndarray  # [k, x_pad]
+    scat_send_master: jnp.ndarray  # [k, x_pad]
+    scat_recv_slot: jnp.ndarray    # [k, x_pad]
+
+
+def _master_mask(combined: jnp.ndarray, num_masters: int) -> jnp.ndarray:
+    """[slots] -> broadcastable-to-payload bool mask of master slots."""
+    m = jnp.arange(combined.shape[0]) < num_masters
+    return m.reshape(m.shape + (1,) * (combined.ndim - 1))
+
+
+def refresh_scatter_agents(topo: ShardTopology, scatter_data: jnp.ndarray,
+                           active: jnp.ndarray, axes,
+                           dense: bool = False):
+    """Exchange 1 (master → scatter agent): ONE message per (master, peer).
+
+    Works for scalar or feature-vector `scatter_data` ([slots] or
+    [slots, *D]).  Returns refreshed (scatter_data, active).  With
+    `dense=True` (iterative programs: every vertex active) the activity
+    payload is skipped — half the exchange ops.
+    """
+    vals = jnp.take(scatter_data, topo.scat_send_master, axis=0)   # [k, x, *D]
+    rec_v = jax.lax.all_to_all(vals, axes, split_axis=0, concat_axis=0,
+                               tiled=True)
+    slots = topo.scat_recv_slot.reshape(-1)
+    flat_v = rec_v.reshape((-1,) + rec_v.shape[2:])
+    sd = scatter_data.at[slots].set(flat_v.astype(scatter_data.dtype),
+                                    mode="drop")
+    if dense:
+        return sd, active
+    acts = jnp.take(active, topo.scat_send_master, axis=0)         # [k, x]
+    rec_a = jax.lax.all_to_all(acts, axes, split_axis=0, concat_axis=0,
+                               tiled=True)
+    act = active.at[slots].set(rec_a.reshape(-1), mode="drop")
+    return sd, act
+
+
+def flush_combiners(topo: ShardTopology, combined: jnp.ndarray, axes,
+                    monoid: Monoid) -> jnp.ndarray:
+    """Exchange 2 (combiner → master): ONE ⊕-reduced value per agent.
+
+    Returns a [num_slots, *D] array of remote contributions folded into
+    local master slots (identity elsewhere).
+    """
+    vals = jnp.take(combined, topo.comb_send_slot, axis=0)          # [k, x, *D]
+    rec = jax.lax.all_to_all(vals, axes, split_axis=0, concat_axis=0,
+                             tiled=True)
+    flat = rec.reshape((-1,) + rec.shape[2:])
+    return segment_combine(flat.astype(combined.dtype),
+                           topo.comb_recv_master.reshape(-1),
+                           topo.part.num_slots, monoid)
+
+
+@runtime_checkable
+class ExchangeBackend(Protocol):
+    """The seam between the canonical superstep and the network.
+
+    `refresh` runs before the local scatter-combine (push master scatter
+    state to remote readers); `reduce` produces the fully ⊕-combined
+    [num_slots, *payload] array the apply phase folds (identity outside
+    master slots).
+    """
+
+    def refresh(self, state: "EngineState") -> "EngineState": ...
+
+    def reduce(self, engine: "GREEngine", part: "DevicePartition",
+               state: "EngineState") -> jnp.ndarray: ...
+
+
+class NullExchange:
+    """Single shard: all destinations are local; refresh is the identity."""
+
+    def refresh(self, state):
+        return state
+
+    def reduce(self, engine, part, state):
+        return engine.scatter_combine(part, state)
+
+
+NULL_EXCHANGE = NullExchange()
+
+
+class _RefreshingExchange:
+    """Shared base for backends that refresh scatter agents before the
+    local phase (the first half of the Agent-Graph protocol)."""
+
+    def __init__(self, topo: ShardTopology, axes, monoid: Monoid,
+                 dense_frontier: bool = False):
+        self.topo = topo
+        self.axes = axes
+        self.monoid = monoid
+        self.dense_frontier = dense_frontier
+
+    def refresh(self, state):
+        from repro.core.engine import EngineState
+        sd, act = refresh_scatter_agents(self.topo, state.scatter_data,
+                                         state.active_scatter, self.axes,
+                                         dense=self.dense_frontier)
+        return EngineState(state.vertex_data, sd, act, state.step)
+
+
+class AgentExchange(_RefreshingExchange):
+    """Agent-Graph exchange (paper §5): scatter refresh + combiner flush."""
+
+    def __init__(self, topo: ShardTopology, axes, monoid: Monoid,
+                 dense_frontier: bool = False, overlap: bool = False):
+        super().__init__(topo, axes, monoid, dense_frontier)
+        self.overlap = overlap
+
+    def reduce(self, engine, part, state):
+        monoid = self.monoid
+        if self.overlap:
+            # remote-destined edges first; their flush overlaps local compute
+            sink = part.num_slots - 1
+            is_remote = part.dst >= part.num_masters  # agents live high
+            remote_part = dataclasses.replace(
+                part, dst=jnp.where(is_remote, part.dst, sink),
+                edges_sorted_by_dst=False)
+            local_part = dataclasses.replace(
+                part, dst=jnp.where(is_remote, sink, part.dst),
+                edges_sorted_by_dst=False)
+            combined_remote = engine.scatter_combine(remote_part, state)
+            flushed = flush_combiners(self.topo, combined_remote, self.axes,
+                                      monoid)
+            combined_local = engine.scatter_combine(local_part, state)
+            return monoid.op(combined_local, flushed)
+        combined = engine.scatter_combine(part, state)
+        flushed = flush_combiners(self.topo, combined, self.axes, monoid)
+        # master slots take direct local + flushed remote contributions
+        local = jnp.where(_master_mask(combined, part.num_masters),
+                          combined, monoid.identity)
+        return monoid.op(local, flushed)
+
+
+class DenseExchange(_RefreshingExchange):
+    """Pregel-style baseline: collective ⊕ over the full relabeled vector.
+
+    Strictly more traffic than AgentExchange (every device reduces the whole
+    [k·cap, *payload] vector); kept as the communication baseline for
+    benchmarks and rooflines.
+    """
+
+    def __init__(self, topo: ShardTopology, axes, monoid: Monoid,
+                 my_row: jnp.ndarray, dense_frontier: bool = False):
+        super().__init__(topo, axes, monoid, dense_frontier)
+        self.my_row = my_row
+
+    def reduce(self, engine, part, state):
+        monoid = self.monoid
+        topo = self.topo
+        k = jax.lax.psum(1, self.axes)
+        cap = part.num_masters
+        combined_loc = engine.scatter_combine(part, state)  # [slots, *D]
+        payload = combined_loc.shape[1:]
+        dtype = combined_loc.dtype
+        # project local master slots back to the global vector [k*cap, *D]
+        myslice = self.my_row * cap
+        global_vec = jnp.full((k * cap,) + payload, monoid.identity, dtype)
+        global_vec = global_vec.at[myslice + jnp.arange(cap)].set(
+            combined_loc[:cap])
+        # combiner slots scatter their partial ⊕ at their global master id
+        comb_vals = jnp.take(combined_loc, topo.comb_send_slot, axis=0,
+                             fill_value=monoid.identity)  # [k, x, *D]
+        recv = jax.lax.all_to_all(topo.comb_recv_master, self.axes, 0, 0,
+                                  tiled=True)
+        tgt = jnp.arange(k)[:, None] * cap + recv
+        tgt = jnp.where(recv >= cap, k * cap, tgt)  # drop padding to sink
+        global_vec = segment_combine(
+            jnp.concatenate([global_vec,
+                             comb_vals.reshape((-1,) + payload)]),
+            jnp.concatenate([jnp.arange(k * cap), tgt.reshape(-1)]),
+            k * cap + 1, monoid)[:k * cap]
+        if monoid.name == "sum":
+            total = jax.lax.psum(global_vec, self.axes)
+        elif monoid.name == "min":
+            total = jax.lax.pmin(global_vec, self.axes)
+        else:
+            total = jax.lax.pmax(global_vec, self.axes)
+        mine = jax.lax.dynamic_slice_in_dim(total, myslice, cap, axis=0)
+        return jnp.full((part.num_slots,) + payload, monoid.identity,
+                        dtype).at[:cap].set(mine)

@@ -2,78 +2,147 @@
 traversal on transposed graphs, GRE implements multi-staged algorithms like
 Betweenness Centrality".
 
-Brandes' algorithm as a driver over the Scatter-Combine primitive: every
-stage is a sequence of BSP supersteps whose per-edge work is the same fused
-`gather(src) → message → segment-combine(dst)` used by the engine:
+Brandes' algorithm as TWO staged VertexPrograms through the canonical
+engine superstep — no hand-rolled loops:
 
-  stage 1  BFS depths (min-combine)                — forward graph
-  stage 2  shortest-path counts σ (sum-combine,    — forward graph
-           level-synchronous along the BFS DAG)
-  stage 3  dependency accumulation δ (sum-combine) — TRANSPOSED graph,
-           by decreasing depth
+  stage 1+2  forward σ   — FORWARD partition, vector payload (3,):
+             msg = [frontier flag, depth+1, σ]; ⊕ = sum.  BFS depth and
+             shortest-path counts compute in one pass: an unvisited vertex
+             receiving flag > 0 folds depth = Σ(depth+1)/Σflag (all frontier
+             parents share one depth, level-synchronous BSP) and
+             σ = Σ σ_parent, then joins the frontier (assert_to_halt keeps
+             everyone else silent).
+  stage 3    backward δ  — TRANSPOSED partition, scalar payload:
+             levels run DESCENDING, scheduled off the superstep counter the
+             engine injects as aux["step"]: level dmax-i scatters
+             (1+δ)/σ at superstep i; receivers one level up fold
+             δ += σ·⊕.  Level-synchrony makes every folded edge a
+             shortest-path-DAG edge, so no per-edge filtering is needed.
+
+Sources batch through `jax.vmap` over the per-source two-stage pipeline —
+the multi-source batching that first-class vector payloads buy us.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import DevicePartition, EngineState, GREEngine
+from repro.core.vertex_program import MONOIDS, VertexProgram
 from repro.graph.structures import Graph
 
 
-@partial(jax.jit, static_argnums=(3, 4))
-def _single_source(src, dst, source, num_vertices: int, max_depth: int):
-    V = num_vertices
-    INF = jnp.int32(2 ** 30)
+def bc_forward_program() -> VertexProgram:
+    """Stage 1+2: BFS depth + σ in one forward pass (vector payload)."""
 
-    # ---- stage 1: BFS depth (min-combine over supersteps) ----
-    def bfs_step(_, depth):
-        cand = jax.ops.segment_min(jnp.take(depth, src) + 1, dst, V)
-        return jnp.minimum(depth, cand)
+    def scatter_msg(src_scatter, _eprop):
+        d, s = src_scatter[..., 0], src_scatter[..., 1]
+        return jnp.stack([jnp.ones_like(d), d + 1.0, s], axis=-1)
 
-    depth0 = jnp.full((V,), INF, jnp.int32).at[source].set(0)
-    depth = jax.lax.fori_loop(0, max_depth, bfs_step, depth0)
+    def combine_activates(old_vd, combined):
+        return jnp.isinf(old_vd[..., 0]) & (combined[..., 0] > 0)
 
-    # ---- stage 2: σ — number of shortest paths, level by level ----
-    def sigma_level(t, sigma):
-        contrib = jnp.where(jnp.take(depth, src) == t,
-                            jnp.take(sigma, src), 0.0)
-        agg = jax.ops.segment_sum(contrib, dst, V)
-        return jnp.where(depth == t + 1, agg, sigma)
+    def apply_fn(vertex_data, combined, _aux):
+        depth = combined[..., 1] / jnp.maximum(combined[..., 0], 1.0)
+        new = jnp.stack([depth, combined[..., 2]], axis=-1)
+        return new, new, jnp.ones(vertex_data.shape[0], dtype=bool)
 
-    sigma0 = jnp.zeros((V,), jnp.float32).at[source].set(1.0)
-    sigma = jax.lax.fori_loop(0, max_depth, sigma_level, sigma0)
+    def init_unvisited(n, _aux):
+        return jnp.stack([jnp.full(n, jnp.inf, jnp.float32),
+                          jnp.zeros(n, jnp.float32)], axis=-1)
 
-    # ---- stage 3: δ on the TRANSPOSED graph, decreasing depth ----
-    def delta_level(i, delta):
-        t = max_depth - i                      # depth of the "downwind" side
-        ratio = jnp.where((jnp.take(depth, dst) == t) & (sigma[dst] > 0),
-                          (1.0 + jnp.take(delta, dst)) / jnp.maximum(
-                              jnp.take(sigma, dst), 1.0), 0.0)
-        # transposed edge (dst -> src): combine at src
-        agg = jax.ops.segment_sum(ratio, src, V)
-        upd = sigma * agg
-        return jnp.where(depth == t - 1, delta + upd, delta)
+    return VertexProgram(
+        name="bc_forward", monoid=MONOIDS["sum"],
+        scatter_msg=scatter_msg, apply_fn=apply_fn,
+        init_vertex_data=init_unvisited,
+        init_scatter_data=init_unvisited,
+        init_active=lambda n, aux: jnp.zeros(n, dtype=bool),
+        combine_activates=combine_activates, halts=True,
+        payload_shape=(3,))
 
-    delta = jax.lax.fori_loop(0, max_depth, delta_level,
-                              jnp.zeros((V,), jnp.float32))
-    return jnp.where(jnp.arange(V) == source, 0.0, delta)
+
+def bc_backward_program() -> VertexProgram:
+    """Stage 3: δ accumulation, level-synchronous by DESCENDING depth.
+
+    Needs aux columns "depth", "sigma" (stage-1/2 outputs) and scalar
+    "dmax"; the engine injects "step".  Runs on the TRANSPOSED partition.
+    """
+
+    def scatter_msg(src_scatter, _eprop):
+        return src_scatter  # (1 + δ_v) / σ_v, refreshed by apply
+
+    def apply_fn(delta, combined, aux):
+        tgt = aux["dmax"] - aux["step"].astype(jnp.float32) - 1.0
+        fold = aux["depth"] == tgt
+        new_delta = jnp.where(fold, delta + aux["sigma"] * combined, delta)
+        sd = (1.0 + new_delta) / jnp.maximum(aux["sigma"], 1.0)
+        return new_delta, sd, fold
+
+    return VertexProgram(
+        name="bc_backward", monoid=MONOIDS["sum"],
+        scatter_msg=scatter_msg, apply_fn=apply_fn,
+        init_vertex_data=lambda n, aux: jnp.zeros(n, jnp.float32),
+        init_scatter_data=lambda n, aux: 1.0 / jnp.maximum(aux["sigma"], 1.0),
+        init_active=lambda n, aux: aux["depth"] == aux["dmax"],
+        halts=False)
+
+
+def _make_bc_batch(graph: Graph, max_depth: int):
+    """Jitted, vmapped per-source pipeline: source id -> δ contributions."""
+    V = graph.num_vertices
+    fwd_part = DevicePartition.from_graph(graph)
+    bwd_part = DevicePartition.from_graph(graph, transpose=True)
+    fwd = GREEngine(bc_forward_program())
+    # backward is iterative (halts=False) but the frontier is one depth
+    # level at a time — keep per-edge activity masks on.
+    bwd = GREEngine(bc_backward_program(), dense_frontier=False)
+    slots = fwd_part.num_slots
+
+    def single(source):
+        src_row = jnp.array([0.0, 1.0], jnp.float32)   # depth 0, σ 1
+        st = fwd.init_state(fwd_part)
+        st = EngineState(
+            st.vertex_data.at[source].set(src_row),
+            st.scatter_data.at[source].set(src_row),
+            jnp.zeros(slots, dtype=bool).at[source].set(True),
+            st.step)
+        out = fwd.run(fwd_part, st, max_depth)
+        depth, sigma = out.vertex_data[..., 0], out.vertex_data[..., 1]
+        dmax = jnp.max(jnp.where(jnp.isinf(depth), -1.0, depth))
+        part_b = dataclasses.replace(
+            bwd_part, aux={**bwd_part.aux, "depth": depth, "sigma": sigma,
+                           "dmax": dmax})
+        delta = bwd.run(part_b, bwd.init_state(part_b),
+                        max_depth + 1).vertex_data
+        return jnp.where(jnp.arange(V) == source, 0.0, delta)
+
+    return jax.jit(jax.vmap(single))
 
 
 def betweenness_centrality(graph: Graph,
                            sources: Optional[Sequence[int]] = None,
-                           max_depth: Optional[int] = None) -> np.ndarray:
+                           max_depth: Optional[int] = None,
+                           batch: int = 64) -> np.ndarray:
     """Exact when `sources` covers all vertices; sampled-approximate
-    otherwise (standard Brandes estimator)."""
+    otherwise (standard Brandes estimator).  Sources run `batch` at a time
+    through one vmapped two-stage engine pipeline."""
     V = graph.num_vertices
-    sources = range(V) if sources is None else sources
+    sources = np.arange(V) if sources is None else np.asarray(list(sources))
     max_depth = max_depth or min(V, 64)
-    src = jnp.asarray(graph.src, jnp.int32)
-    dst = jnp.asarray(graph.dst, jnp.int32)
+    batch = min(batch, max(1, sources.shape[0]))
+    run_batch = _make_bc_batch(graph, max_depth)
     bc = jnp.zeros((V,), jnp.float32)
-    for s in sources:
-        bc = bc + _single_source(src, dst, int(s), V, max_depth)
+    for lo in range(0, sources.shape[0], batch):
+        chunk = sources[lo:lo + batch]
+        # pad the ragged tail to a static lane count (one compile, not two);
+        # padded lanes repeat a real source and are weighted out of the sum
+        n = chunk.shape[0]
+        padded = np.pad(chunk, (0, batch - n), mode="edge")
+        w = jnp.asarray(np.arange(batch) < n, jnp.float32)
+        bc = bc + (run_batch(jnp.asarray(padded, jnp.int32))
+                   * w[:, None]).sum(axis=0)
     return np.asarray(bc)

@@ -19,7 +19,7 @@ dataflow op, race-free and deterministic by construction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,10 +85,20 @@ class VertexProgram:
                       (and, for scatter agents, by the master's message);
       combine_data  — the ⊕ accumulator, reset after each apply.
 
+    Message payloads are first-class `[slots, *payload_shape]` feature
+    vectors; the scalar programs of the paper are the `payload_shape = ()`
+    special case.  `payload_shape`/`msg_dtype` form the payload spec that
+    init, scatter, combine, and apply all consume uniformly: init_scatter
+    returns `[n, *payload-or-scatter shape]`, scatter_msg maps gathered
+    scatter data `[E, *S]` to messages `[E, *payload_shape]`, the ⊕
+    accumulator is `[slots, *payload_shape]`, and apply folds it.
+
     `scatter_msg(src_scatter_data, edge_prop)` builds message payloads for a
     batch of edges at once (the engine has already gathered source data).
     `apply_fn(vertex_data, combined, aux)` returns
-    `(new_vertex_data, new_scatter_data, activate_scatter)`.
+    `(new_vertex_data, new_scatter_data, activate_scatter)`; the engine
+    injects the superstep counter into `aux["step"]` so level-synchronous
+    programs can schedule themselves.
     Init functions receive `(n, aux)` where aux holds static per-partition
     columns such as `out_degree`.
     """
@@ -97,9 +107,9 @@ class VertexProgram:
     monoid: Monoid
     scatter_msg: Callable[[jnp.ndarray, Optional[jnp.ndarray]], jnp.ndarray]
     apply_fn: Callable[[jnp.ndarray, jnp.ndarray, Any], tuple]
-    init_vertex_data: Callable[[int], jnp.ndarray]
-    init_scatter_data: Callable[[int], jnp.ndarray]
-    init_active: Callable[[int], jnp.ndarray]
+    init_vertex_data: Callable[[int, Dict[str, jnp.ndarray]], jnp.ndarray]
+    init_scatter_data: Callable[[int, Dict[str, jnp.ndarray]], jnp.ndarray]
+    init_active: Callable[[int, Dict[str, jnp.ndarray]], jnp.ndarray]
     # `combine_activates(old_vertex_data, combined) -> bool[V]`: whether the
     # accumulated message actually changes the vertex (paper's
     # `activate_apply`).  Vertices without any improving message skip apply.
@@ -108,4 +118,8 @@ class VertexProgram:
     # Iterative programs (PageRank) keep scattering; traversal programs halt.
     halts: bool = True
     needs_edge_prop: Optional[str] = None
+    # Payload spec: trailing feature shape of messages/⊕ accumulator.
+    # () = scalar (PageRank, SSSP); (D,) = feature vectors (GNN aggregation,
+    # Brandes σ, batched multi-source BFS).
+    payload_shape: Tuple[int, ...] = ()
     msg_dtype: Any = jnp.float32

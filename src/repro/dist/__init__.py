@@ -1,0 +1,1 @@
+"""Distribution helpers: mesh/NamedSharding utilities and parameter specs."""

@@ -273,13 +273,13 @@ def _gnn_fullgraph_agent_cell(arch, cfg: GNNConfig, shape: GNNShape,
             den = jax.lax.psum(msk_f.sum(), axes)
             return (-num / jnp.maximum(den, 1.0))[None]
 
-        loss = jax.shard_map(
+        loss = shd.shard_map(
             shard_loss, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: spec, topo,
                                    is_leaf=lambda x: hasattr(x, "ndim")),
                       spec, spec, spec, spec),
-            out_specs=P(axes[0] if len(axes) == 1 else axes),
-            check_vma=False)(topo, feats, norm, labels, mask)
+            out_specs=P(axes[0] if len(axes) == 1 else axes))(
+            topo, feats, norm, labels, mask)
         return loss.mean()
 
     def train_step(params, opt_state, topo, feats, norm, labels, mask):
@@ -535,10 +535,10 @@ def _dimenet_fullgraph_agent_cell(arch, cfg: GNNConfig, shape: GNNShape,
 
         tree_spec = lambda t: jax.tree.map(
             lambda _: spec, t, is_leaf=lambda x: hasattr(x, "ndim"))
-        loss = jax.shard_map(
+        loss = shd.shard_map(
             shard_loss, mesh=mesh,
             in_specs=(tree_spec(topo_t), tree_spec(topo_n), tree_spec(shard)),
-            out_specs=P(axes), check_vma=False)(topo_t, topo_n, shard)
+            out_specs=P(axes))(topo_t, topo_n, shard)
         return loss.mean()
 
     def train_step(params, opt_state, topo_t, topo_n, shard):
@@ -592,9 +592,9 @@ def _recsys_cell(arch, cfg: RecSysConfig, shape: RecSysShape,
         def shard_lk(tbl, ids_l):
             idx = jax.lax.axis_index(tp)
             return sharded_embedding_lookup(tbl, ids_l, idx, rps, tp)
-        return jax.shard_map(
+        return shd.shard_map(
             shard_lk, mesh=mesh, in_specs=(P(tp, None), P(dp, None)),
-            out_specs=P(dp, None, None), check_vma=False)(table, ids)
+            out_specs=P(dp, None, None))(table, ids)
 
     B = shape.batch
     flops_interact = (cfg.n_attn_layers *

@@ -100,28 +100,30 @@ def run_graph_engine_dryrun(mesh) -> dict:
         pass
 
     def run30(topo, state):
-        # inline the shard body: 30 supersteps of scatter-combine + exchange
+        # inline the shard body: 30 canonical supersteps with AgentExchange
         import jax as _jax
+        from repro.dist.sharding import shard_map as _shard_map
 
         def shard(topo_s, state_s):
             sq = lambda t: _jax.tree.map(lambda a: a[0], t)
             topo_l, st = sq(topo_s), sq(state_s)
+            backend = eng.make_exchange(topo_l)
 
             def body(i, s):
-                return eng._superstep_shard(topo_l, s)
+                return eng.local.superstep(topo_l.part, s, backend)
 
             out = _jax.lax.fori_loop(0, 30, body, st)
             return _jax.tree.map(lambda a: a[None], out)
 
-        return _jax.shard_map(
+        return _shard_map(
             shard, mesh=mesh,
             in_specs=(_jax.tree.map(lambda _: spec, topo,
                                     is_leaf=lambda x: hasattr(x, "ndim")),
                       _jax.tree.map(lambda _: spec, state,
                                     is_leaf=lambda x: hasattr(x, "ndim"))),
             out_specs=_jax.tree.map(lambda _: spec, state,
-                                    is_leaf=lambda x: hasattr(x, "ndim")),
-            check_vma=False)(topo, state)
+                                    is_leaf=lambda x: hasattr(x, "ndim")))(
+            topo, state)
 
     t0 = time.time()
     lowered = jax.jit(run30).lower(topo_abs, state_abs)

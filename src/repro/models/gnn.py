@@ -16,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GNNConfig
-from repro.core.dist_engine import ShardTopology, flush_combiners, refresh_scatter_agents
-from repro.core.vertex_program import MONOIDS
+from repro.core.exchange import (ShardTopology, flush_combiners,
+                                 refresh_scatter_agents)
+from repro.core.vertex_program import MONOIDS, segment_combine
 from repro.nn.layers import dense_init, mlp_apply, mlp_init
 
 
@@ -38,15 +39,54 @@ class GraphBatch:
 
 def propagate(h: jnp.ndarray, src, dst, edge_mask, num_nodes: int,
               edge_weight=None, use_pallas: bool = False) -> jnp.ndarray:
-    """Scatter-combine a feature matrix along edges (⊕ = sum)."""
+    """Scatter-combine a feature matrix along edges (⊕ = sum).
+
+    Routes through the engine's unified `segment_combine` hot path —
+    vector-payload messages through the same XLA fused scatter-reduce or
+    Pallas MXU kernel every VertexProgram uses.
+    """
     msg = jnp.take(h, src, axis=0)
     if edge_weight is not None:
         msg = msg * edge_weight[:, None]
     msg = jnp.where(edge_mask[:, None], msg, 0)
-    if use_pallas:
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.segment_combine(msg, dst, num_nodes, "sum")
-    return jax.ops.segment_sum(msg, dst, num_nodes)
+    return segment_combine(msg, dst, num_nodes, MONOIDS["sum"],
+                           use_pallas=use_pallas)
+
+
+def engine_propagate(batch: "GraphBatch", use_pallas: bool = False):
+    """Full-batch aggregation through the GRE engine itself.
+
+    Builds a DevicePartition over the batch's COO arrays plus a
+    `gnn_aggregate_program` with payload_shape = (D,), and returns
+    `prop_fn(h, edge_weight)` whose single canonical superstep performs the
+    layer propagation — byte-identical to `propagate` but running on the
+    unified engine stack (and its Pallas combine when `use_pallas`).
+    """
+    from repro.core.algorithms import gnn_aggregate_program
+    from repro.core.engine import DevicePartition, EngineState, GREEngine
+    V = int(batch.node_feats.shape[0])
+    sink = V  # padded edges already point in [0, V); add one sink slot
+    part = DevicePartition(
+        src=batch.src, dst=jnp.where(batch.edge_mask, batch.dst, sink),
+        edge_mask=batch.edge_mask, num_masters=V, num_slots=V + 1,
+        edges_sorted_by_dst=False,
+        edge_props={}, aux={})
+
+    def prop_fn(h, edge_weight):
+        d = h.shape[-1]
+        eng = GREEngine(gnn_aggregate_program(
+            d, edge_weighted=edge_weight is not None), use_pallas=use_pallas)
+        props = ({"edge_norm": jnp.where(batch.edge_mask, edge_weight, 0.0)}
+                 if edge_weight is not None else {})
+        p = dataclasses.replace(part, edge_props=props)
+        sd = jnp.zeros((V + 1, d), h.dtype).at[:V].set(h)
+        state = EngineState(
+            vertex_data=jnp.zeros((V, d), h.dtype), scatter_data=sd,
+            active_scatter=jnp.ones(V + 1, dtype=bool).at[sink].set(False),
+            step=jnp.zeros((), jnp.int32))
+        return eng.superstep(p, state).vertex_data
+
+    return prop_fn
 
 
 def propagate_sharded(h_slots: jnp.ndarray, topo: ShardTopology, axes,
@@ -58,7 +98,7 @@ def propagate_sharded(h_slots: jnp.ndarray, topo: ShardTopology, axes,
     """
     part = topo.part
     active = jnp.ones((h_slots.shape[0],), dtype=bool)
-    h_slots, _ = refresh_scatter_agents(topo, h_slots, active, axes, 0.0)
+    h_slots, _ = refresh_scatter_agents(topo, h_slots, active, axes)
     combined = propagate(h_slots, part.src, part.dst, part.edge_mask,
                          part.num_slots, edge_weight)
     flushed = flush_combiners(topo, combined, axes, MONOIDS["sum"])

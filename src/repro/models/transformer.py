@@ -175,10 +175,10 @@ def _ffn_block(p, x, cfg: LMConfig, ctx: DistCtx):
              "w_out": P(ctx.tp, None, wdp)}
     if "w_gate" in mp:
         pspec["w_gate"] = P(ctx.tp, wdp, None)
-    out, aux = jax.shard_map(
+    from repro.dist.sharding import shard_map
+    out, aux = shard_map(
         moe_shard, mesh=ctx.mesh, in_specs=(tok_spec, pspec),
-        out_specs=(tok_spec, P()), check_vma=False)(
-        h.reshape(B * S, d), mp)
+        out_specs=(tok_spec, P()))(h.reshape(B * S, d), mp)
     return x + out.reshape(B, S, d), aux
 
 

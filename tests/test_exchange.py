@@ -1,0 +1,139 @@
+"""ExchangeBackend equivalence: the canonical superstep must produce the
+same results whichever communication substrate is plugged in.
+
+Backend equivalence runs in a subprocess (the 8-device XLA_FLAGS must be set
+before jax initializes); the Pallas-vs-XLA vector-payload combine checks run
+in-process.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "__SRC__")
+import numpy as np
+import jax
+
+from repro.graph.generators import rmat_edges
+from repro.core.engine import GREEngine, DevicePartition
+from repro.core.partition import greedy_partition
+from repro.core.agent_graph import build_agent_graph
+from repro.core.dist_engine import DistGREEngine
+from repro.core import algorithms
+
+g = rmat_edges(scale=8, edge_factor=8, seed=5, weights=True).dedup()
+k = 8
+ag = build_agent_graph(g, greedy_partition(g, k, batch_size=64), k)
+mesh = jax.make_mesh((8,), ("graph",))
+sp = DevicePartition.from_graph(g)
+
+failures = []
+
+# --- NullExchange reference: the single-shard canonical superstep ---
+def null_run(program, source=None, max_steps=100):
+    eng = GREEngine(program)
+    st = eng.run(sp, eng.init_state(sp, source=source), max_steps=max_steps)
+    return np.asarray(st.vertex_data)
+
+BACKENDS = [("agent", False), ("agent", True), ("dense", False)]
+
+# PageRank (sum monoid): distributed two-stage ⊕ reorders float adds, so
+# equivalence is to float tolerance; min-monoid programs are bitwise.
+pr_ref = null_run(algorithms.pagerank_program(), max_steps=20)
+for mode, overlap in BACKENDS:
+    eng = DistGREEngine(algorithms.pagerank_program(), mesh, ("graph",),
+                        exchange=mode, overlap=overlap)
+    pr, _ = eng.run(ag, max_steps=20)
+    if not np.allclose(pr, pr_ref, rtol=1e-5, atol=1e-6):
+        failures.append(f"pagerank {mode} overlap={overlap}")
+
+# SSSP (min monoid): bitwise-identical across every backend.
+ss_ref = null_run(algorithms.sssp_program(), source=0, max_steps=300)
+for mode, overlap in BACKENDS:
+    eng = DistGREEngine(algorithms.sssp_program(), mesh, ("graph",),
+                        exchange=mode, overlap=overlap)
+    dist, _ = eng.run(ag, source=0, max_steps=300)
+    if not np.array_equal(np.nan_to_num(dist, posinf=-1.0),
+                          np.nan_to_num(ss_ref, posinf=-1.0)):
+        failures.append(f"sssp {mode} overlap={overlap}")
+
+# CC (min monoid, undirected): bitwise-identical across every backend.
+gu = g.as_undirected().dedup()
+agu = build_agent_graph(gu, greedy_partition(gu, k, batch_size=64), k)
+spu = DevicePartition.from_graph(gu)
+se = GREEngine(algorithms.cc_program())
+cc_ref = np.asarray(se.run(spu, se.init_state(spu), max_steps=300).vertex_data)
+for mode, overlap in BACKENDS:
+    eng = DistGREEngine(algorithms.cc_program(), mesh, ("graph",),
+                        exchange=mode, overlap=overlap)
+    label, _ = eng.run(agu, max_steps=300)
+    if not np.array_equal(label, cc_ref):
+        failures.append(f"cc {mode} overlap={overlap}")
+
+assert not failures, failures
+print("EXCHANGE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_backends_agree_on_rmat(tmp_path):
+    script = tmp_path / "exchange_check.py"
+    script.write_text(SCRIPT.replace("__SRC__", SRC))
+    proc = subprocess.run([sys.executable, str(script)], capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "EXCHANGE_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------- kernels
+@pytest.mark.parametrize("op", ["min", "max"])
+def test_pallas_vector_payload_matches_xla(op):
+    """Pallas vs XLA segment_combine for min/max monoids, D=16 payloads."""
+    from repro.core.vertex_program import MONOIDS, segment_combine
+    rng = np.random.default_rng(7)
+    e, d, v = 1024, 16, 200
+    dst = np.sort(rng.integers(0, v, e)).astype(np.int32)
+    msgs = jnp.asarray(rng.normal(size=(e, d)), jnp.float32)
+    xla = segment_combine(msgs, jnp.asarray(dst), v, MONOIDS[op],
+                          indices_are_sorted=True)
+    pls = segment_combine(msgs, jnp.asarray(dst), v, MONOIDS[op],
+                          use_pallas=True)
+    fix = lambda x: jnp.nan_to_num(x, posinf=1e30, neginf=-1e30)
+    np.testing.assert_allclose(np.asarray(fix(pls)), np.asarray(fix(xla)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_engine_vector_payload_aggregation_matches_segment_sum():
+    """gnn_aggregate_program through the canonical superstep == segment_sum,
+    on XLA and Pallas combine paths."""
+    import jax
+    from repro.core.algorithms import gnn_aggregate_program
+    from repro.core.engine import DevicePartition, GREEngine
+    from repro.graph.generators import rmat_edges
+    from repro.models.gnn import GraphBatch, engine_propagate
+
+    g = rmat_edges(scale=7, edge_factor=8, seed=2).dedup()
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(g.num_vertices, 32)), jnp.float32)
+    want = jax.ops.segment_sum(jnp.take(h, jnp.asarray(g.src), axis=0),
+                               jnp.asarray(g.dst), g.num_vertices)
+    batch = GraphBatch(
+        node_feats=h, src=jnp.asarray(g.src, jnp.int32),
+        dst=jnp.asarray(g.dst, jnp.int32),
+        edge_mask=jnp.ones(g.num_edges, dtype=bool),
+        labels=jnp.zeros(g.num_vertices, jnp.int32),
+        train_mask=jnp.ones(g.num_vertices, dtype=bool))
+    for use_pallas in (False, True):
+        got = engine_propagate(batch, use_pallas=use_pallas)(h, None)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

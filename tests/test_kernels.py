@@ -1,6 +1,8 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax
