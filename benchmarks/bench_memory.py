@@ -11,8 +11,6 @@ Measured here as actual bytes of the runtime representation:
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit
 from repro.core.agent_graph import build_agent_graph
 from repro.core.partition import greedy_partition, partition_quality

@@ -23,7 +23,8 @@ def run(scale: int = 14, edge_factor: int = 16, iters: int = 5):
     us = time_fn(step, state, iters=iters)
     eps = g.num_edges / (us / 1e6)
     emit(f"pagerank_iter_rmat{scale}", us,
-         f"V={g.num_vertices};E={g.num_edges};edges_per_s={eps:.3g}")
+         f"V={g.num_vertices};E={g.num_edges};edges_per_s={eps:.3g}",
+         edges=g.num_edges)
     return us
 
 

@@ -19,7 +19,8 @@ def run(scale: int = 13):
     us = time_fn(run_fn, st, warmup=1, iters=3)
     steps = int(run_fn(st).step)
     emit(f"sssp_rmat{scale}", us,
-         f"V={g.num_vertices};E={g.num_edges};supersteps={steps}")
+         f"V={g.num_vertices};E={g.num_edges};supersteps={steps}",
+         edges=g.num_edges * max(steps, 1))
 
     gu = g.as_undirected()
     part_u = DevicePartition.from_graph(gu)
@@ -29,7 +30,8 @@ def run(scale: int = 13):
     us = time_fn(run_fn, st, warmup=1, iters=3)
     steps = int(run_fn(st).step)
     emit(f"cc_rmat{scale}", us,
-         f"V={gu.num_vertices};E={gu.num_edges};supersteps={steps}")
+         f"V={gu.num_vertices};E={gu.num_edges};supersteps={steps}",
+         edges=gu.num_edges * max(steps, 1))
 
 
 def main():

@@ -49,7 +49,8 @@ def run(scale: int = 10, edge_factor: int = 8, d_feat: int = 64,
         us = time_fn(step, _state(part, h), iters=iters)
         eps = g.num_edges * d_feat / (us / 1e6)
         emit(f"vector_combine_d{d_feat}_rmat{scale}_{name}", us,
-             f"V={g.num_vertices};E={g.num_edges};payload_elems_per_s={eps:.3g}")
+             f"V={g.num_vertices};E={g.num_edges};payload_elems_per_s={eps:.3g}",
+             edges=g.num_edges)
         out[name] = us
     return out
 

@@ -1,10 +1,19 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Every `emit` also records a machine-readable result into `RESULTS`
+(`benchmarks/run.py --json` dumps them as the CI perf artifact); passing
+`edges=` adds the cross-benchmark comparable ns/edge number.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
+
+# Machine-readable results accumulated across one benchmark run
+# (list of dicts: name, us_per_call, optional ns_per_edge, derived).
+RESULTS: list = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -20,5 +29,12 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = ""):
+def emit(name: str, us: float, derived: str = "",
+         edges: Optional[int] = None):
+    rec = {"name": name, "us_per_call": round(us, 3)}
+    if edges:
+        rec["ns_per_edge"] = round(us * 1e3 / edges, 6)
+    if derived:
+        rec["derived"] = derived
+    RESULTS.append(rec)
     print(f"{name},{us:.1f},{derived}", flush=True)

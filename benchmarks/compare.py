@@ -1,0 +1,92 @@
+"""CI perf regression gate: compare a fresh BENCH_ci.json against the
+committed BENCH_baseline.json.
+
+  python benchmarks/compare.py BENCH_baseline.json BENCH_ci.json \
+      [--threshold 1.5] [--min-us 5000]
+
+Fails (exit 1) when any benchmark present in BOTH files regressed by more
+than ``threshold``× in MACHINE-NORMALIZED us_per_call: every ratio is
+divided by the median ratio across shared benchmarks before gating.
+Shared CI runners vary in absolute speed — and differ from whatever
+machine produced the committed baseline — so a uniform 1.4× slowdown is
+machine drift, not a regression; a single benchmark regressing relative
+to the rest of the suite (the compact path silently falling back to dense
+scans, an accidentally quadratic exchange) still sticks out.  Raw ratios
+are printed for trend reading.
+
+Entries whose baseline is under ``--min-us`` are reported but never gate
+(sub-millisecond timings are runner noise).  Benchmarks only in one file
+are listed as added/removed, never fatal — refresh the baseline by
+committing a trusted main-branch BENCH_ci.json artifact as
+BENCH_baseline.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data.get("results", [])}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when the machine-normalized current/baseline "
+                         "ratio exceeds this")
+    ap.add_argument("--min-us", type=float, default=5000.0,
+                    help="baselines under this never gate (noise floor)")
+    args = ap.parse_args(argv)
+
+    base, cur = load(args.baseline), load(args.current)
+    shared = sorted(set(base) & set(cur))
+    ratios = {n: cur[n]["us_per_call"] / max(base[n]["us_per_call"], 1e-9)
+              for n in shared}
+    # machine-speed factor: median ratio over the gated (above-noise-floor)
+    # benchmarks only — sub-floor micro-benchmark jitter must not shift the
+    # normalization that gates everything else; needs a few samples to be
+    # meaningful, otherwise gate on raw ratios
+    solid = [r for n, r in ratios.items()
+             if base[n]["us_per_call"] >= args.min_us]
+    speed = statistics.median(solid) if len(solid) >= 3 else 1.0
+    regressions, rows = [], []
+    for name in sorted(set(base) | set(cur)):
+        b, c = base.get(name), cur.get(name)
+        if b is None:
+            rows.append(f"  + {name}: new benchmark ({c['us_per_call']:.0f} us)")
+            continue
+        if c is None:
+            rows.append(f"  - {name}: missing from current run")
+            continue
+        ratio = ratios[name]
+        norm = ratio / speed
+        gated = b["us_per_call"] >= args.min_us
+        flag = ""
+        if norm > args.threshold:
+            flag = " REGRESSION" if gated else " (regressed, under noise floor)"
+            if gated:
+                regressions.append(name)
+        rows.append(f"    {name}: {b['us_per_call']:.0f} -> "
+                    f"{c['us_per_call']:.0f} us ({ratio:.2f}x raw, "
+                    f"{norm:.2f}x normalized){flag}")
+    print(f"perf gate: threshold {args.threshold}x normalized, "
+          f"noise floor {args.min_us:.0f} us, "
+          f"machine-speed factor {speed:.2f}x")
+    print("\n".join(rows))
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} regression(s) > "
+              f"{args.threshold}x: {regressions}")
+        return 1
+    print("\nOK: no gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,20 +1,27 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run            # all
-  python -m benchmarks.run pagerank   # one
-  python -m benchmarks.run --smoke    # CI: one tiny config per suite
+  python -m benchmarks.run                         # all
+  python -m benchmarks.run pagerank                # one
+  python -m benchmarks.run --smoke                 # CI: tiny config per suite
+  python -m benchmarks.run --smoke --json OUT.json # CI: + perf artifact
 
-Output: ``name,us_per_call,derived`` CSV on stdout.
+``--json`` writes the machine-readable results (per-benchmark
+us_per_call and, where meaningful, ns/edge) for the CI regression gate
+(`benchmarks/compare.py` against the committed BENCH_baseline.json).
+Human-readable ``name,us_per_call,derived`` CSV always goes to stdout.
 """
+import json
+import platform
 import sys
 
-from benchmarks import (bench_gas_vs_sc, bench_memory, bench_pagerank,
-                        bench_partition, bench_traversal, bench_vector_combine,
-                        bench_weak)
+from benchmarks import (bench_frontier, bench_gas_vs_sc, bench_memory,
+                        bench_pagerank, bench_partition, bench_traversal,
+                        bench_vector_combine, bench_weak, common)
 
 SUITES = {
     "pagerank": bench_pagerank.main,     # Table 5 / Fig. 8a-b
     "traversal": bench_traversal.main,   # Fig. 8c-d
+    "frontier": bench_frontier.main,     # dense vs compacted frontier
     "weak": bench_weak.main,             # Fig. 10
     "partition": bench_partition.main,   # Fig. 11/12/13 + §5.1
     "memory": bench_memory.main,         # §7.1.2 memory claim
@@ -26,6 +33,7 @@ SUITES = {
 # without an entry fall back to their full run.
 SMOKE = {
     "pagerank": lambda: bench_pagerank.run(scale=8, iters=2),
+    "frontier": lambda: bench_frontier.run(scale=12, iters=2),
     "vector": lambda: bench_vector_combine.run(scale=8, d_feat=64, iters=2),
 }
 
@@ -35,18 +43,36 @@ def main() -> None:
     smoke = "--smoke" in args
     if smoke:
         args.remove("--smoke")
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            sys.exit("--json needs an output path")
+        del args[i:i + 2]
     wanted = args or list(SMOKE if smoke else SUITES)
     unknown = [n for n in wanted if n not in SUITES]
     if unknown:
         sys.exit(f"unknown suite(s) {unknown}; choose from {list(SUITES)}")
-    if smoke:
-        print("name,us_per_call,derived")
-        for name in wanted:
-            SMOKE.get(name, SUITES[name])()
-        return
     print("name,us_per_call,derived")
     for name in wanted:
-        SUITES[name]()
+        if smoke and name in SMOKE:
+            SMOKE[name]()
+        else:
+            SUITES[name]()
+    if json_path:
+        payload = {
+            "mode": "smoke" if smoke else "full",
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "results": common.RESULTS,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(common.RESULTS)} results to {json_path}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

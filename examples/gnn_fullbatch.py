@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models.gnn import (GraphBatch, compute_gcn_edge_norm, gnn_forward,
                               gnn_loss, init_gnn)
-from repro.graph.generators import rmat_edges
 from repro.optim.adamw import AdamW
 
 cfg, _ = get_config("gcn-cora")

@@ -7,7 +7,6 @@ Uses the full framework path: config -> data pipeline -> AdamW ->
 checkpointing -> train loop (smollm-135m family; the --tiny flag shrinks
 width/depth for CPU)."""
 import argparse
-import sys
 
 from repro.launch import train
 

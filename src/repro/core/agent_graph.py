@@ -29,7 +29,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.partition import assign_owners, rebalance_owners
-from repro.graph.structures import Graph
+from repro.graph.structures import Graph, csr_layout
 
 
 @dataclasses.dataclass
@@ -65,6 +65,12 @@ class AgentGraph:
     num_scatter: np.ndarray    # [k] real scatter-agent counts
     num_combiner: np.ndarray   # [k] real combiner counts
     num_edges: np.ndarray      # [k] real edge counts
+
+    # src-sorted CSR secondary index per partition (frontier compaction);
+    # masters AND scatter agents have out-edge ranges.
+    csr_indptr: np.ndarray     # [k, num_slots + 1]
+    csr_eidx: np.ndarray       # [k, e_pad] positions in the dst-sorted cols
+    csr_max_deg: int = 0       # max local out-degree over all partitions
 
     @property
     def num_slots(self) -> int:
@@ -199,6 +205,16 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
                 out[a, b, :v.shape[0]] = v
         return out
 
+    # src-sorted CSR over each partition's local edges (frontier compaction)
+    num_slots = sink + 1
+    csr_indptr = np.zeros((k, num_slots + 1), dtype=np.int32)
+    csr_eidx = np.zeros((k, e_pad), dtype=np.int32)
+    csr_max_deg = 0
+    for i in range(k):
+        csr_indptr[i], csr_eidx[i], deg = csr_layout(src[i], edge_mask[i],
+                                                     num_slots)
+        csr_max_deg = max(csr_max_deg, deg)
+
     return AgentGraph(
         k=k, num_vertices=V, cap=cap, s_pad=s_pad, c_pad=c_pad, e_pad=e_pad,
         s_x_pad=s_x_pad, c_x_pad=c_x_pad,
@@ -210,4 +226,5 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
         scat_recv_slot=stack(scat_recv, sink, s_x_pad),
         num_scatter=num_scatter, num_combiner=num_combiner,
         num_edges=num_edges,
+        csr_indptr=csr_indptr, csr_eidx=csr_eidx, csr_max_deg=csr_max_deg,
     )

@@ -5,6 +5,8 @@ the functional `VertexProgram` API.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.core.vertex_program import MONOIDS, VertexProgram
@@ -40,33 +42,42 @@ def pagerank_program() -> VertexProgram:
     )
 
 
-def sssp_program() -> VertexProgram:
+def sssp_program(num_sources: Optional[int] = None) -> VertexProgram:
     """Paper Fig. 3b: Bellman-Ford label correcting.
 
     scatter: msg = oldDistance[src] + weight(e)
     combine: distance[dst] = min(distance[dst], msg); activate if improved
     apply:   oldDistance = distance; activate_scatter
     assert_to_halt: deactivate after scattering (frontier semantics).
+
+    `num_sources=D` batches D roots INTO the payload: states become
+    `[slots, D]`, ⊕ is elementwise min, and a vertex stays active while ANY
+    lane improves — one traversal pass serves all D sources, amortizing the
+    topology traffic (seed lane d with `init_state(part, source=[s_0..s_D])`).
     """
+    D = num_sources
 
     def scatter_msg(src_scatter, weight):
-        return src_scatter + weight
+        return src_scatter + (weight if D is None else weight[:, None])
 
     def combine_activates(old_vd, combined):
-        return combined < old_vd  # strictly improving messages only
+        improved = combined < old_vd  # strictly improving messages only
+        return improved if D is None else jnp.any(improved, axis=-1)
 
     def apply_fn(vertex_data, combined, _aux):
         dist = jnp.minimum(vertex_data, combined)
-        return dist, dist, jnp.ones_like(dist, dtype=bool)
+        return dist, dist, jnp.ones(dist.shape[0], dtype=bool)
 
+    shape = (lambda n: (n,)) if D is None else (lambda n: (n, D))
     return VertexProgram(
-        name="sssp", monoid=MONOIDS["min"],
+        name="sssp" if D is None else f"sssp_x{D}", monoid=MONOIDS["min"],
         scatter_msg=scatter_msg, apply_fn=apply_fn,
-        init_vertex_data=lambda n, aux: jnp.full(n, jnp.inf, jnp.float32),
-        init_scatter_data=lambda n, aux: jnp.full(n, jnp.inf, jnp.float32),
+        init_vertex_data=lambda n, aux: jnp.full(shape(n), jnp.inf, jnp.float32),
+        init_scatter_data=lambda n, aux: jnp.full(shape(n), jnp.inf, jnp.float32),
         init_active=lambda n, aux: jnp.zeros(n, dtype=bool),  # source set via engine
         combine_activates=combine_activates,
         halts=True, needs_edge_prop="weight",
+        payload_shape=() if D is None else (D,),
     )
 
 
@@ -105,26 +116,34 @@ def cc_program() -> VertexProgram:
     )
 
 
-def bfs_program() -> VertexProgram:
-    """BFS depth = SSSP with unit weights (paper §4.2 traversal family)."""
+def bfs_program(num_sources: Optional[int] = None) -> VertexProgram:
+    """BFS depth = SSSP with unit weights (paper §4.2 traversal family).
+
+    `num_sources=D` is the multi-source batched variant: payload `(D,)`,
+    ⊕ = elementwise min, one pass for D roots (see `sssp_program`).
+    """
+    D = num_sources
 
     def scatter_msg(src_scatter, _eprop):
         return src_scatter + 1.0
 
     def combine_activates(old_vd, combined):
-        return combined < old_vd
+        improved = combined < old_vd
+        return improved if D is None else jnp.any(improved, axis=-1)
 
     def apply_fn(vertex_data, combined, _aux):
         depth = jnp.minimum(vertex_data, combined)
-        return depth, depth, jnp.ones_like(depth, dtype=bool)
+        return depth, depth, jnp.ones(depth.shape[0], dtype=bool)
 
+    shape = (lambda n: (n,)) if D is None else (lambda n: (n, D))
     return VertexProgram(
-        name="bfs", monoid=MONOIDS["min"],
+        name="bfs" if D is None else f"bfs_x{D}", monoid=MONOIDS["min"],
         scatter_msg=scatter_msg, apply_fn=apply_fn,
-        init_vertex_data=lambda n, aux: jnp.full(n, jnp.inf, jnp.float32),
-        init_scatter_data=lambda n, aux: jnp.full(n, jnp.inf, jnp.float32),
+        init_vertex_data=lambda n, aux: jnp.full(shape(n), jnp.inf, jnp.float32),
+        init_scatter_data=lambda n, aux: jnp.full(shape(n), jnp.inf, jnp.float32),
         init_active=lambda n, aux: jnp.zeros(n, dtype=bool),
         combine_activates=combine_activates, halts=True,
+        payload_shape=() if D is None else (D,),
     )
 
 

@@ -47,7 +47,8 @@ class DistGREEngine:
     def __init__(self, program: VertexProgram, mesh: Mesh,
                  axis_names: Tuple[str, ...] = ("graph",),
                  exchange: str = "agent", overlap: bool = False,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, frontier: str = "auto",
+                 frontier_cap: Optional[int] = None):
         assert exchange in self.EXCHANGES, exchange
         # NullExchange never communicates: correct only on a 1-device mesh
         # (useful to A/B the shard_map plumbing against GREEngine).
@@ -58,7 +59,11 @@ class DistGREEngine:
         self.axes = axis_names
         self.exchange = exchange
         self.overlap = overlap
-        self.local = GREEngine(program, use_pallas=use_pallas)
+        # frontier/frontier_cap select the per-shard scatter strategy
+        # (engine.py); the lax.cond is shard-local and branch bodies have no
+        # collectives, so shards may diverge dense-vs-compact per superstep.
+        self.local = GREEngine(program, use_pallas=use_pallas,
+                               frontier=frontier, frontier_cap=frontier_cap)
 
     # ------------------------------------------------------ backend selection
     def make_exchange(self, topo: ShardTopology):
@@ -86,6 +91,9 @@ class DistGREEngine:
             aux={"out_degree": jnp.asarray(ag.out_degree),
                  "global_id": jnp.asarray(
                      ag.new2old.reshape(ag.k, ag.cap).astype(np.float32))},
+            csr_indptr=jnp.asarray(ag.csr_indptr),
+            csr_eidx=jnp.asarray(ag.csr_eidx),
+            csr_max_deg=ag.csr_max_deg,
         )
         return ShardTopology(
             part=part,
@@ -95,8 +103,10 @@ class DistGREEngine:
             scat_recv_slot=jnp.asarray(ag.scat_recv_slot),
         )
 
-    def init_state(self, ag: AgentGraph, source: Optional[int] = None):
-        """Stacked initial state [k, ...]; `source` is an ORIGINAL vertex id."""
+    def init_state(self, ag: AgentGraph, source=None):
+        """Stacked initial state [k, ...]; `source` is an ORIGINAL vertex id,
+        or — for `payload_shape=(D,)` multi-source programs — a length-D
+        sequence of original ids (source d seeds payload lane d)."""
         p = self.program
         k, cap, slots = ag.k, ag.cap, ag.num_slots
         aux = {"out_degree": jnp.asarray(ag.out_degree),   # [k, cap]
@@ -114,11 +124,18 @@ class DistGREEngine:
         real = jnp.asarray(ag.new2old.reshape(k, cap) >= 0)
         act = act.at[:, :cap].set(act[:, :cap] & real)
         if source is not None:
-            g = int(ag.old2new[source])
-            i, s = g // cap, g % cap
-            vd = vd.at[i, s].set(0.0)
-            sd = sd.at[i, s].set(0.0)
-            act = jnp.zeros_like(act).at[i, s].set(True)
+            multi = np.ndim(source) > 0
+            act = jnp.zeros_like(act)
+            for d, sv in enumerate(np.atleast_1d(np.asarray(source))):
+                g = int(ag.old2new[int(sv)])
+                i, s = g // cap, g % cap
+                if multi:  # seed payload lane d only
+                    vd = vd.at[i, s, d].set(0.0)
+                    sd = sd.at[i, s, d].set(0.0)
+                else:
+                    vd = vd.at[i, s].set(0.0)
+                    sd = sd.at[i, s].set(0.0)
+                act = act.at[i, s].set(True)
         return EngineState(vd, sd, act, jnp.zeros((k,), jnp.int32))
 
     # ------------------------------------------------------------------- run
@@ -153,7 +170,7 @@ class DistGREEngine:
                             out_specs=spec_leading)
         return jax.jit(sharded)
 
-    def run(self, ag: AgentGraph, source: Optional[int] = None,
+    def run(self, ag: AgentGraph, source=None,
             max_steps: int = 100) -> Tuple[np.ndarray, EngineState]:
         """Execute; returns (vertex_data in ORIGINAL vertex order, state)."""
         topo = self.device_topology(ag)

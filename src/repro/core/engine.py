@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +54,13 @@ class DevicePartition:
     edges_sorted_by_dst: bool = dataclasses.field(metadata=dict(static=True))
     edge_props: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
     aux: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    # Src-sorted CSR secondary index (graph.structures.csr_layout) — the
+    # substrate of the frontier-compacted scatter (core/frontier.py).  None
+    # disables compaction for this partition.
+    csr_indptr: Optional[jnp.ndarray] = None   # [num_slots + 1]
+    csr_eidx: Optional[jnp.ndarray] = None     # [E_pad] pos in dst-sorted cols
+    csr_max_deg: int = dataclasses.field(default=0,
+                                         metadata=dict(static=True))
 
     @staticmethod
     def from_graph(graph, pad_to: Optional[int] = None,
@@ -64,7 +71,8 @@ class DevicePartition:
         backward-traversal substrate for multi-stage algorithms (paper §4.2:
         Brandes' δ accumulation runs on the transposed graph).
         """
-        from repro.graph.structures import pad_edges, sort_edges_by_dst
+        from repro.graph.structures import (csr_layout, pad_edges,
+                                            sort_edges_by_dst)
         if transpose:
             graph = graph.reversed()
         src, dst, props = graph.src, graph.dst, dict(graph.edge_props)
@@ -75,6 +83,7 @@ class DevicePartition:
         psrc, pdst, mask = pad_edges(src, dst, e_pad, pad_vertex=v)
         props = {k: np.pad(p, (0, e_pad - graph.num_edges)) for k, p in props.items()}
         out_deg = graph.out_degree().astype(np.float32)
+        indptr, eidx, max_deg = csr_layout(psrc, mask, v + 1)
         return DevicePartition(
             src=jnp.asarray(psrc), dst=jnp.asarray(pdst),
             edge_mask=jnp.asarray(mask), num_masters=v, num_slots=v + 1,
@@ -82,6 +91,8 @@ class DevicePartition:
             edge_props={k: jnp.asarray(p) for k, p in props.items()},
             aux={"out_degree": jnp.asarray(out_deg),
                  "global_id": jnp.arange(v, dtype=jnp.float32)},
+            csr_indptr=jnp.asarray(indptr), csr_eidx=jnp.asarray(eidx),
+            csr_max_deg=max_deg,
         )
 
 
@@ -97,12 +108,40 @@ class EngineState:
 
 
 class GREEngine:
-    """Drives a VertexProgram over one DevicePartition."""
+    """Drives a VertexProgram over one DevicePartition.
+
+    `frontier` selects the scatter strategy (core/frontier.py):
+
+      "auto"    — per-superstep `lax.cond`: dense scan when the frontier is
+                  large, compacted CSR-range gather when it fits in
+                  `frontier_cap` slots (≈ the 5-10% density crossover).  The
+                  compacted path is statically skipped when its padded
+                  `[cap, max_deg]` tile would touch more edges than the
+                  dense scan (power-law hubs blow up `max_deg`).
+      "compact" — always attempt compaction (tests/microbenchmarks); the
+                  overflow guard still falls back to dense when the live
+                  frontier exceeds `frontier_cap`.
+      "dense"   — the original every-edge masked scan.
+
+    Engines in `dense_frontier` mode (iterative programs like PageRank,
+    where every vertex stays active) and partitions without a CSR layout
+    always take the dense path.  Level-synchronous iterative programs that
+    opt INTO activity masks (`dense_frontier=False`, e.g. Brandes' backward
+    δ whose frontier is one depth level) do compact; for their sum monoids
+    the strategies agree to float tolerance (the segment reduction
+    reorders), not bitwise like min/max.
+    """
+
+    FRONTIERS = ("auto", "dense", "compact")
 
     def __init__(self, program: VertexProgram, use_pallas: bool = False,
-                 dense_frontier: Optional[bool] = None):
+                 dense_frontier: Optional[bool] = None,
+                 frontier: str = "auto", frontier_cap: Optional[int] = None):
+        assert frontier in self.FRONTIERS, frontier
         self.program = program
         self.use_pallas = use_pallas
+        self.frontier = frontier
+        self.frontier_cap = frontier_cap
         # Iterative programs (halts=False, e.g. PageRank) keep every vertex
         # active (paper §4.1), so per-edge activity masks are pure overhead;
         # dense mode skips them (the sink slot's scatter_data is pinned to
@@ -110,9 +149,27 @@ class GREEngine:
         self.dense_frontier = (dense_frontier if dense_frontier is not None
                                else not program.halts)
 
+    def _compaction_cap(self, part: DevicePartition) -> Optional[int]:
+        """Static (trace-time) gate: the frontier capacity to compile the
+        compacted path with, or None to stay dense for this partition."""
+        if self.frontier == "dense" or self.dense_frontier:
+            return None  # iterative programs: frontier is always everything
+        if part.csr_indptr is None or part.csr_max_deg <= 0:
+            return None
+        from repro.core.frontier import default_cap
+        cap = min(self.frontier_cap or default_cap(part.num_slots),
+                  part.num_slots)
+        if (self.frontier == "auto"
+                and cap * part.csr_max_deg >= part.src.shape[0]):
+            return None  # padded tile ≥ dense scan: compaction can't win
+        return cap
+
     # ------------------------------------------------------------------ init
     def init_state(self, part: DevicePartition,
-                   source: Optional[int] = None) -> EngineState:
+                   source=None) -> EngineState:
+        """`source` may be a single vertex id, or — for multi-source batched
+        traversal programs with `payload_shape=(D,)` — a length-D sequence:
+        source d seeds payload lane d, so ONE pass answers D roots."""
         p = self.program
         n, s = part.num_masters, part.num_slots
         vertex_data = p.init_vertex_data(n, part.aux)
@@ -121,9 +178,16 @@ class GREEngine:
                                 p.msg_dtype).at[:n].set(sd0)
         active = jnp.zeros(s, dtype=bool).at[:n].set(p.init_active(n, part.aux))
         if source is not None:
-            vertex_data = vertex_data.at[source].set(0.0)
-            scatter_data = scatter_data.at[source].set(0.0)
-            active = jnp.zeros(s, dtype=bool).at[source].set(True)
+            src_idx = jnp.asarray(source, jnp.int32)
+            if src_idx.ndim == 0:
+                vertex_data = vertex_data.at[src_idx].set(0.0)
+                scatter_data = scatter_data.at[src_idx].set(0.0)
+                active = jnp.zeros(s, dtype=bool).at[src_idx].set(True)
+            else:  # one source per payload lane
+                lanes = jnp.arange(src_idx.shape[0])
+                vertex_data = vertex_data.at[src_idx, lanes].set(0.0)
+                scatter_data = scatter_data.at[src_idx, lanes].set(0.0)
+                active = jnp.zeros(s, dtype=bool).at[src_idx].set(True)
         return EngineState(vertex_data, scatter_data, active,
                            jnp.zeros((), jnp.int32))
 
@@ -134,7 +198,25 @@ class GREEngine:
 
         Returns the ⊕-accumulated combine_data over `num_segments` slots
         ([num_segments, *payload_shape]; defaults to all local slots).
+
+        Dispatches between the dense every-edge scan and the
+        frontier-compacted CSR-range gather (core/frontier.py) per the
+        engine's `frontier` strategy; exchange backends call THIS, so
+        compaction slots in without touching them.
         """
+        nseg = num_segments or part.num_slots
+        cap = self._compaction_cap(part)
+        if cap is None:
+            return self.dense_scatter_combine(part, state, nseg)
+        from repro.core.frontier import frontier_scatter_combine
+        return frontier_scatter_combine(
+            self.program, part, state, nseg, cap,
+            dense_fn=lambda: self.dense_scatter_combine(part, state, nseg))
+
+    def dense_scatter_combine(self, part: DevicePartition, state: EngineState,
+                              num_segments: Optional[int] = None
+                              ) -> jnp.ndarray:
+        """The dense strategy: scan every edge, mask inactive sources."""
         p = self.program
         eprop = (part.edge_props[p.needs_edge_prop]
                  if p.needs_edge_prop else None)

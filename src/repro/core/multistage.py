@@ -5,22 +5,28 @@ Betweenness Centrality".
 Brandes' algorithm as TWO staged VertexPrograms through the canonical
 engine superstep — no hand-rolled loops:
 
-  stage 1+2  forward σ   — FORWARD partition, vector payload (3,):
-             msg = [frontier flag, depth+1, σ]; ⊕ = sum.  BFS depth and
-             shortest-path counts compute in one pass: an unvisited vertex
-             receiving flag > 0 folds depth = Σ(depth+1)/Σflag (all frontier
-             parents share one depth, level-synchronous BSP) and
-             σ = Σ σ_parent, then joins the frontier (assert_to_halt keeps
-             everyone else silent).
-  stage 3    backward δ  — TRANSPOSED partition, scalar payload:
+  stage 1+2  forward σ   — FORWARD partition, vector payload (D, 3):
+             per source lane d, msg = [frontier flag, depth+1, σ]; ⊕ = sum.
+             BFS depth and shortest-path counts compute in one pass: an
+             unvisited lane receiving flag > 0 folds
+             depth = Σ(depth+1)/Σflag (all frontier parents share one
+             depth, level-synchronous BSP) and σ = Σ σ_parent, then joins
+             that lane's frontier.  Lane gating rides the ⊕ identity: apply
+             zeroes every lane that did not JUST join, so re-activated
+             vertices contribute nothing on already-settled lanes.
+  stage 3    backward δ  — TRANSPOSED partition, payload (D,):
              levels run DESCENDING, scheduled off the superstep counter the
-             engine injects as aux["step"]: level dmax-i scatters
-             (1+δ)/σ at superstep i; receivers one level up fold
-             δ += σ·⊕.  Level-synchrony makes every folded edge a
-             shortest-path-DAG edge, so no per-edge filtering is needed.
+             engine injects as aux["step"]: lanes at level dmax-i scatter
+             (1+δ)/σ at superstep i (other lanes hold the sum identity 0);
+             receivers one level up fold δ += σ·⊕.  Level-synchrony makes
+             every folded edge a shortest-path-DAG edge, so no per-edge
+             filtering is needed.
 
-Sources batch through `jax.vmap` over the per-source two-stage pipeline —
-the multi-source batching that first-class vector payloads buy us.
+Source batching is IN THE PAYLOAD: one engine pass serves all D sources of
+a batch (topology is traversed once, not once per source), replacing the
+earlier `jax.vmap` over per-source pipelines.  The same batching works
+distributed — the programs are ordinary vector-payload VertexPrograms, so
+every ExchangeBackend speaks them.
 """
 from __future__ import annotations
 
@@ -36,79 +42,102 @@ from repro.core.vertex_program import MONOIDS, VertexProgram
 from repro.graph.structures import Graph
 
 
-def bc_forward_program() -> VertexProgram:
-    """Stage 1+2: BFS depth + σ in one forward pass (vector payload)."""
+def bc_forward_program(num_sources: int) -> VertexProgram:
+    """Stage 1+2: BFS depth + σ for D sources in one forward pass.
+
+    vertex_data is [n, D, 2] = (depth, σ); scatter_data IS the message
+    triple [n, D, 3] = (frontier flag, depth+1, σ), zeroed on lanes off the
+    current frontier so ⊕ = sum ignores them.
+    """
+    D = num_sources
 
     def scatter_msg(src_scatter, _eprop):
-        d, s = src_scatter[..., 0], src_scatter[..., 1]
-        return jnp.stack([jnp.ones_like(d), d + 1.0, s], axis=-1)
+        return src_scatter  # apply pre-builds the gated (flag, depth+1, σ)
 
     def combine_activates(old_vd, combined):
-        return jnp.isinf(old_vd[..., 0]) & (combined[..., 0] > 0)
+        newly = jnp.isinf(old_vd[..., 0]) & (combined[..., 0] > 0)
+        return jnp.any(newly, axis=-1)
 
     def apply_fn(vertex_data, combined, _aux):
+        newly = jnp.isinf(vertex_data[..., 0]) & (combined[..., 0] > 0)
         depth = combined[..., 1] / jnp.maximum(combined[..., 0], 1.0)
-        new = jnp.stack([depth, combined[..., 2]], axis=-1)
-        return new, new, jnp.ones(vertex_data.shape[0], dtype=bool)
+        sigma = combined[..., 2]
+        new_vd = jnp.where(newly[..., None],
+                           jnp.stack([depth, sigma], axis=-1), vertex_data)
+        sd = jnp.where(newly[..., None],
+                       jnp.stack([jnp.ones_like(depth), depth + 1.0, sigma],
+                                 axis=-1), 0.0)
+        return new_vd, sd, jnp.any(newly, axis=-1)
 
     def init_unvisited(n, _aux):
-        return jnp.stack([jnp.full(n, jnp.inf, jnp.float32),
-                          jnp.zeros(n, jnp.float32)], axis=-1)
+        return jnp.stack([jnp.full((n, D), jnp.inf, jnp.float32),
+                          jnp.zeros((n, D), jnp.float32)], axis=-1)
 
     return VertexProgram(
         name="bc_forward", monoid=MONOIDS["sum"],
         scatter_msg=scatter_msg, apply_fn=apply_fn,
         init_vertex_data=init_unvisited,
-        init_scatter_data=init_unvisited,
+        init_scatter_data=lambda n, aux: jnp.zeros((n, D, 3), jnp.float32),
         init_active=lambda n, aux: jnp.zeros(n, dtype=bool),
         combine_activates=combine_activates, halts=True,
-        payload_shape=(3,))
+        payload_shape=(D, 3))
 
 
-def bc_backward_program() -> VertexProgram:
+def bc_backward_program(num_sources: int) -> VertexProgram:
     """Stage 3: δ accumulation, level-synchronous by DESCENDING depth.
 
-    Needs aux columns "depth", "sigma" (stage-1/2 outputs) and scalar
-    "dmax"; the engine injects "step".  Runs on the TRANSPOSED partition.
+    Needs aux columns "depth", "sigma" ([n, D] stage-1/2 outputs) and scalar
+    "dmax" (global max over lanes); the engine injects "step".  Runs on the
+    TRANSPOSED partition.  A lane scatters only at its level's superstep —
+    off-level lanes hold the sum identity 0.
     """
+    D = num_sources
 
     def scatter_msg(src_scatter, _eprop):
-        return src_scatter  # (1 + δ_v) / σ_v, refreshed by apply
+        return src_scatter  # (1 + δ_v) / σ_v on the level's lanes, else 0
 
     def apply_fn(delta, combined, aux):
         tgt = aux["dmax"] - aux["step"].astype(jnp.float32) - 1.0
-        fold = aux["depth"] == tgt
+        fold = aux["depth"] == tgt                       # [n, D]
         new_delta = jnp.where(fold, delta + aux["sigma"] * combined, delta)
-        sd = (1.0 + new_delta) / jnp.maximum(aux["sigma"], 1.0)
-        return new_delta, sd, fold
+        sd = jnp.where(fold, (1.0 + new_delta)
+                       / jnp.maximum(aux["sigma"], 1.0), 0.0)
+        return new_delta, sd, jnp.any(fold, axis=-1)
+
+    def init_scatter(n, aux):
+        top = aux["depth"] == aux["dmax"]
+        return jnp.where(top, 1.0 / jnp.maximum(aux["sigma"], 1.0), 0.0)
 
     return VertexProgram(
         name="bc_backward", monoid=MONOIDS["sum"],
         scatter_msg=scatter_msg, apply_fn=apply_fn,
-        init_vertex_data=lambda n, aux: jnp.zeros(n, jnp.float32),
-        init_scatter_data=lambda n, aux: 1.0 / jnp.maximum(aux["sigma"], 1.0),
-        init_active=lambda n, aux: aux["depth"] == aux["dmax"],
-        halts=False)
+        init_vertex_data=lambda n, aux: jnp.zeros((n, D), jnp.float32),
+        init_scatter_data=init_scatter,
+        init_active=lambda n, aux: jnp.any(aux["depth"] == aux["dmax"],
+                                           axis=-1),
+        halts=False, payload_shape=(D,))
 
 
-def _make_bc_batch(graph: Graph, max_depth: int):
-    """Jitted, vmapped per-source pipeline: source id -> δ contributions."""
+def _make_bc_batch(graph: Graph, max_depth: int, batch: int):
+    """Jitted payload-batched pipeline: [D] source ids -> [V, D] δ lanes."""
     V = graph.num_vertices
     fwd_part = DevicePartition.from_graph(graph)
     bwd_part = DevicePartition.from_graph(graph, transpose=True)
-    fwd = GREEngine(bc_forward_program())
+    fwd = GREEngine(bc_forward_program(batch))
     # backward is iterative (halts=False) but the frontier is one depth
     # level at a time — keep per-edge activity masks on.
-    bwd = GREEngine(bc_backward_program(), dense_frontier=False)
+    bwd = GREEngine(bc_backward_program(batch), dense_frontier=False)
     slots = fwd_part.num_slots
 
-    def single(source):
-        src_row = jnp.array([0.0, 1.0], jnp.float32)   # depth 0, σ 1
+    def run_batch(sources):                              # [D] int32
+        lanes = jnp.arange(batch)
         st = fwd.init_state(fwd_part)
+        src_vd = jnp.array([0.0, 1.0], jnp.float32)      # depth 0, σ 1
+        src_sd = jnp.array([1.0, 1.0, 1.0], jnp.float32)  # flag, depth+1, σ
         st = EngineState(
-            st.vertex_data.at[source].set(src_row),
-            st.scatter_data.at[source].set(src_row),
-            jnp.zeros(slots, dtype=bool).at[source].set(True),
+            st.vertex_data.at[sources, lanes].set(src_vd),
+            st.scatter_data.at[sources, lanes].set(src_sd),
+            jnp.zeros(slots, dtype=bool).at[sources].set(True),
             st.step)
         out = fwd.run(fwd_part, st, max_depth)
         depth, sigma = out.vertex_data[..., 0], out.vertex_data[..., 1]
@@ -117,10 +146,11 @@ def _make_bc_batch(graph: Graph, max_depth: int):
             bwd_part, aux={**bwd_part.aux, "depth": depth, "sigma": sigma,
                            "dmax": dmax})
         delta = bwd.run(part_b, bwd.init_state(part_b),
-                        max_depth + 1).vertex_data
-        return jnp.where(jnp.arange(V) == source, 0.0, delta)
+                        max_depth + 1).vertex_data       # [V, D]
+        own = jnp.arange(V)[:, None] == sources[None, :]
+        return jnp.where(own, 0.0, delta)
 
-    return jax.jit(jax.vmap(single))
+    return jax.jit(run_batch)
 
 
 def betweenness_centrality(graph: Graph,
@@ -129,12 +159,13 @@ def betweenness_centrality(graph: Graph,
                            batch: int = 64) -> np.ndarray:
     """Exact when `sources` covers all vertices; sampled-approximate
     otherwise (standard Brandes estimator).  Sources run `batch` at a time
-    through one vmapped two-stage engine pipeline."""
+    as payload lanes of ONE two-stage engine pipeline — the graph is
+    traversed once per batch, not once per source."""
     V = graph.num_vertices
     sources = np.arange(V) if sources is None else np.asarray(list(sources))
     max_depth = max_depth or min(V, 64)
     batch = min(batch, max(1, sources.shape[0]))
-    run_batch = _make_bc_batch(graph, max_depth)
+    run_batch = _make_bc_batch(graph, max_depth, batch)
     bc = jnp.zeros((V,), jnp.float32)
     for lo in range(0, sources.shape[0], batch):
         chunk = sources[lo:lo + batch]
@@ -144,5 +175,5 @@ def betweenness_centrality(graph: Graph,
         padded = np.pad(chunk, (0, batch - n), mode="edge")
         w = jnp.asarray(np.arange(batch) < n, jnp.float32)
         bc = bc + (run_batch(jnp.asarray(padded, jnp.int32))
-                   * w[:, None]).sum(axis=0)
+                   * w[None, :]).sum(axis=1)
     return np.asarray(bc)

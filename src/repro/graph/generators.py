@@ -47,6 +47,24 @@ def rmat_edges(scale: int, edge_factor: int = 16, a: float = GRAPH500_A,
     return Graph(n, src, dst, props)
 
 
+def circulant_graph(n: int, degree: int = 16, weights: bool = False,
+                    seed: int = 0) -> Graph:
+    """Each vertex connects to its next `degree` neighbors mod n.
+
+    Uniform out-degree and diameter ≈ n/degree make this the sparse-frontier
+    stress case for traversal: a BFS frontier never exceeds `degree` vertices
+    (< 1% of V for n ≥ 128·degree), so dense every-edge scans waste ≥ 99% of
+    their gather bandwidth — the workload frontier compaction targets.
+    """
+    src = np.repeat(np.arange(n, dtype=np.int64), degree)
+    dst = (src + np.tile(np.arange(1, degree + 1, dtype=np.int64), n)) % n
+    props = {}
+    if weights:
+        rng = np.random.default_rng(seed)
+        props["weight"] = rng.integers(1, 16, size=n * degree).astype(np.float32)
+    return Graph(n, src, dst, props)
+
+
 def ring_graph(n: int, weights: bool = False) -> Graph:
     src = np.arange(n, dtype=np.int64)
     dst = (src + 1) % n
@@ -58,8 +76,10 @@ def grid_graph(rows: int, cols: int) -> Graph:
     """4-neighbor grid, directed both ways."""
     idx = np.arange(rows * cols).reshape(rows, cols)
     s, d = [], []
-    s.append(idx[:, :-1].ravel()); d.append(idx[:, 1:].ravel())
-    s.append(idx[:-1, :].ravel()); d.append(idx[1:, :].ravel())
+    s.append(idx[:, :-1].ravel())
+    d.append(idx[:, 1:].ravel())
+    s.append(idx[:-1, :].ravel())
+    d.append(idx[1:, :].ravel())
     src = np.concatenate(s + d)
     dst = np.concatenate(d + s)
     return Graph(rows * cols, src, dst)

@@ -110,6 +110,32 @@ def pad_edges(src: np.ndarray, dst: np.ndarray, target: int,
     return ps, pd, mask
 
 
+def csr_layout(src: np.ndarray, edge_mask: np.ndarray, num_slots: int
+               ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Src-sorted secondary index over padded (typically dst-sorted) edges.
+
+    The frontier-compacted scatter (`repro.core.frontier`) gathers only the
+    active vertices' out-edge ranges; that needs CSR `indptr` keyed by source
+    slot.  Rather than duplicating the edge columns in src-sorted order, we
+    return a POSITION index: `eidx[p]` is where the p-th src-sorted real edge
+    lives in the original padded arrays, so `dst[eidx]`/`props[eidx]` read
+    the canonical columns (and stay consistent when callers rewrite `dst`,
+    e.g. the overlap exchange's remote/local split).
+
+    Returns `(indptr [num_slots+1], eidx [E_pad], max_deg)`.  Padded edges
+    (mask False) are excluded — every slot's range covers real edges only,
+    so `max_deg` is the true maximum out-degree over local slots.
+    """
+    real = np.flatnonzero(edge_mask)
+    order = real[np.argsort(src[real], kind="stable")]
+    counts = np.bincount(src[real], minlength=num_slots).astype(np.int64)
+    indptr = np.zeros(num_slots + 1, dtype=np.int32)
+    indptr[1:] = np.cumsum(counts)
+    eidx = np.zeros(src.shape[0], dtype=np.int32)
+    eidx[:order.shape[0]] = order
+    return indptr, eidx, int(counts.max()) if counts.size else 0
+
+
 def sort_edges_by_dst(src: np.ndarray, dst: np.ndarray,
                       edge_props: Optional[Dict[str, np.ndarray]] = None):
     """Sort COO edges by destination (the combine key).

@@ -4,10 +4,8 @@ exists).  These are the call sites models use via `use_pallas` flags.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -20,7 +20,6 @@ matmul dims multiples of the 128-lane MXU tiles.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ import json
 import sys
 from pathlib import Path
 
-from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.launch.roofline import PEAK_FLOPS
 
 
 def load(outdir: str, mesh: str = "single"):

@@ -7,8 +7,7 @@ shardings, and analytic MODEL_FLOPS metadata for the roofline.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ from pathlib import Path
 
 import jax
 
-from repro.configs import ALL_ARCHS, all_cells, get_shapes
+from repro.configs import all_cells
 from repro.launch.mesh import make_production_mesh
 from repro.launch import roofline as rl
 

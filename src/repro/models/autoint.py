@@ -8,7 +8,7 @@ the combiner-agent pattern (local masked partial lookups + ONE psum), see
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

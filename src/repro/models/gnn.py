@@ -9,7 +9,7 @@ all_to_all per layer — the same machinery as `repro.core.dist_engine`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

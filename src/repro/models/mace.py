@@ -15,7 +15,7 @@ convention-free); rotation invariance is asserted by tests.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

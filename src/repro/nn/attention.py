@@ -10,7 +10,6 @@ which replaces it on real TPUs via `use_pallas`).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

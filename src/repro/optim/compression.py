@@ -11,8 +11,6 @@ psum'd in int32, and dequantized — all inside the jitted step.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

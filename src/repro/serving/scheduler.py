@@ -7,7 +7,7 @@ never recompile (static shapes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

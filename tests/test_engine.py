@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import algorithms
 from repro.core.engine import DevicePartition, GREEngine
-from repro.graph.generators import erdos_renyi_edges, ring_graph, rmat_edges
+from repro.graph.generators import ring_graph, rmat_edges
 
 
 @pytest.fixture(scope="module")

@@ -67,6 +67,38 @@ for mode, overlap in BACKENDS:
                           np.nan_to_num(ss_ref, posinf=-1.0)):
         failures.append(f"sssp {mode} overlap={overlap}")
 
+# Multi-source batched BFS (payload (D,), ⊕ = elementwise min): one pass
+# must equal D independent single-source passes, on the single shard AND
+# through every distributed backend.
+D, sources = 4, [0, 7, 33, 101]
+ms_ref = np.stack([null_run(algorithms.bfs_program(), source=s,
+                            max_steps=100) for s in sources], axis=1)
+ms_one = null_run(algorithms.bfs_program(num_sources=D), source=sources,
+                  max_steps=100)
+if not np.array_equal(np.nan_to_num(ms_one, posinf=-1.0),
+                      np.nan_to_num(ms_ref, posinf=-1.0)):
+    failures.append("bfs multi-source single-shard")
+for mode, overlap in BACKENDS:
+    eng = DistGREEngine(algorithms.bfs_program(num_sources=D), mesh,
+                        ("graph",), exchange=mode, overlap=overlap)
+    depths, _ = eng.run(ag, source=sources, max_steps=100)
+    if not np.array_equal(np.nan_to_num(depths, posinf=-1.0),
+                          np.nan_to_num(ms_ref, posinf=-1.0)):
+        failures.append(f"bfs multi-source {mode} overlap={overlap}")
+
+# Compacted-frontier scatter under AgentExchange: the per-shard strategy
+# cond must not perturb results (min monoid -> bitwise).  overlap=True is
+# the path that rewrites part.dst via dataclasses.replace — it relies on
+# csr_eidx being a POSITION index into the rewritten columns.
+for overlap in (False, True):
+    eng = DistGREEngine(algorithms.sssp_program(), mesh, ("graph",),
+                        exchange="agent", overlap=overlap,
+                        frontier="compact", frontier_cap=64)
+    dist_c, _ = eng.run(ag, source=0, max_steps=300)
+    if not np.array_equal(np.nan_to_num(dist_c, posinf=-1.0),
+                          np.nan_to_num(ss_ref, posinf=-1.0)):
+        failures.append(f"sssp agent compact-frontier overlap={overlap}")
+
 # CC (min monoid, undirected): bitwise-identical across every backend.
 gu = g.as_undirected().dedup()
 agu = build_agent_graph(gu, greedy_partition(gu, k, batch_size=64), k)

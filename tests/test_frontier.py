@@ -1,0 +1,224 @@
+"""Frontier-compacted scatter vs the dense masked scan, and multi-source
+payload batching vs independent single-source runs.
+
+Equivalence contract (docs/engine.md "Frontier strategies"): for min-monoid
+traversal programs the two strategies must produce BITWISE-identical
+vertex_data — min is exactly associative/commutative, so even the segment
+reduction order cannot leak through.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import algorithms
+from repro.core.engine import DevicePartition, EngineState, GREEngine
+from repro.graph.generators import circulant_graph, rmat_edges
+from repro.graph.structures import Graph
+
+
+def _run(program, part, source=None, frontier="auto", cap=None,
+         max_steps=300):
+    eng = GREEngine(program, frontier=frontier, frontier_cap=cap)
+    out = eng.run(part, eng.init_state(part, source=source), max_steps)
+    return np.asarray(out.vertex_data)
+
+
+# ------------------------------------------------- dense == compact, exact
+def _assert_strategies_agree(program, part, source=None, cap=None):
+    dense = _run(program, part, source=source, frontier="dense")
+    compact = _run(program, part, source=source, frontier="compact", cap=cap)
+    np.testing.assert_array_equal(dense, compact)
+
+
+def test_bfs_compact_matches_dense_power_law():
+    g = rmat_edges(scale=8, edge_factor=8, seed=3).dedup()
+    part = DevicePartition.from_graph(g)
+    _assert_strategies_agree(algorithms.bfs_program(), part, source=0)
+
+
+def test_sssp_compact_matches_dense_power_law():
+    g = rmat_edges(scale=8, edge_factor=8, seed=4, weights=True).dedup()
+    part = DevicePartition.from_graph(g)
+    _assert_strategies_agree(algorithms.sssp_program(), part, source=0)
+
+
+def test_cc_compact_matches_dense_power_law():
+    g = rmat_edges(scale=7, edge_factor=8, seed=5).dedup().as_undirected()
+    part = DevicePartition.from_graph(g)
+    _assert_strategies_agree(algorithms.cc_program(), part)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(scale=st.integers(5, 7), edge_factor=st.integers(2, 8),
+           seed=st.integers(0, 999), cap=st.sampled_from([None, 8, 64]),
+           source=st.integers(0, 31))
+    def test_traversal_strategies_bitwise_equal(scale, edge_factor, seed,
+                                                cap, source):
+        """Random power-law graphs, random capacities (including caps small
+        enough to force mid-run overflow fallbacks): bitwise identical."""
+        g = rmat_edges(scale=scale, edge_factor=edge_factor, seed=seed,
+                       weights=True).dedup()
+        part = DevicePartition.from_graph(g)
+        _assert_strategies_agree(algorithms.bfs_program(), part,
+                                 source=source, cap=cap)
+        _assert_strategies_agree(algorithms.sssp_program(), part,
+                                 source=source, cap=cap)
+
+    @settings(max_examples=8, deadline=None)
+    @given(scale=st.integers(5, 7), seed=st.integers(0, 999),
+           cap=st.sampled_from([None, 16]))
+    def test_cc_strategies_bitwise_equal(scale, seed, cap):
+        g = rmat_edges(scale=scale, edge_factor=4,
+                       seed=seed).dedup().as_undirected()
+        part = DevicePartition.from_graph(g)
+        _assert_strategies_agree(algorithms.cc_program(), part, cap=cap)
+
+
+# --------------------------------------------------- overflow / star graph
+def test_star_graph_overflow_falls_back_to_dense():
+    """Hub activates EVERY leaf in one superstep — the frontier (V-1
+    vertices) overflows any small capacity.  The guard must take the dense
+    path for that superstep instead of silently dropping vertices."""
+    n = 257
+    src = np.zeros(n - 1, dtype=np.int64)
+    dst = np.arange(1, n, dtype=np.int64)
+    # leaves link back to the hub so the overflowing frontier also scatters
+    g = Graph(n, np.concatenate([src, dst]), np.concatenate([dst, src]))
+    part = DevicePartition.from_graph(g)
+    depth = _run(algorithms.bfs_program(), part, source=0,
+                 frontier="compact", cap=8, max_steps=10)
+    want = np.concatenate([[0.0], np.ones(n - 1, np.float32)])
+    np.testing.assert_array_equal(depth, want)
+
+
+def test_compact_cond_branches_per_superstep():
+    """On a circulant graph with cap < frontier for SSSP but not BFS, both
+    still match dense exactly (per-superstep cond, not per-run)."""
+    g = circulant_graph(512, degree=8, weights=True, seed=1)
+    part = DevicePartition.from_graph(g)
+    _assert_strategies_agree(algorithms.sssp_program(), part, source=3,
+                             cap=16)
+
+
+def test_auto_skips_compaction_when_tile_exceeds_dense_scan():
+    """Static gate: a power-law hub makes cap*max_deg >= E; auto must
+    compile the dense path only (and still be correct)."""
+    n = 64
+    src = np.zeros(n - 1, dtype=np.int64)
+    dst = np.arange(1, n, dtype=np.int64)
+    g = Graph(n, src, dst)
+    part = DevicePartition.from_graph(g)
+    eng = GREEngine(algorithms.bfs_program(), frontier="auto")
+    assert eng._compaction_cap(part) is None
+    depth = _run(algorithms.bfs_program(), part, source=0, frontier="auto")
+    want = np.concatenate([[0.0], np.ones(n - 1, np.float32)])
+    np.testing.assert_array_equal(depth, want)
+
+
+# ------------------------------------------------------------ multi-source
+@pytest.mark.parametrize("maker,weights", [
+    (algorithms.bfs_program, False),
+    (algorithms.sssp_program, True),
+])
+def test_multi_source_matches_independent_runs(maker, weights):
+    g = rmat_edges(scale=7, edge_factor=8, seed=6, weights=True).dedup()
+    part = DevicePartition.from_graph(g)
+    sources = [0, 3, 17, 42]
+    batched = _run(maker(num_sources=len(sources)), part, source=sources)
+    singles = np.stack([_run(maker(), part, source=s) for s in sources],
+                       axis=1)
+    np.testing.assert_array_equal(batched, singles)
+
+
+def test_multi_source_bfs_compact_matches_dense():
+    g = rmat_edges(scale=7, edge_factor=8, seed=7).dedup()
+    part = DevicePartition.from_graph(g)
+    prog = algorithms.bfs_program(num_sources=3)
+    _assert_strategies_agree(prog, part, source=[1, 2, 3], cap=32)
+
+
+def test_multi_source_repeated_and_isolated_roots():
+    """Duplicate roots give identical lanes; a sink-only root's lane stays
+    inf everywhere but at the root itself."""
+    g = rmat_edges(scale=6, edge_factor=4, seed=8).dedup()
+    # vertex with no out-edges (if none exists, add an isolated one)
+    outdeg = g.out_degree()
+    sinks = np.flatnonzero(outdeg == 0)
+    sink = int(sinks[0]) if sinks.size else g.num_vertices - 1
+    part = DevicePartition.from_graph(g)
+    sources = [0, 0, sink]
+    out = _run(algorithms.bfs_program(num_sources=3), part, source=sources)
+    np.testing.assert_array_equal(out[:, 0], out[:, 1])
+    reach = np.flatnonzero(~np.isinf(out[:, 2]))
+    assert sink in reach
+
+
+# ----------------------------------------------------- multistage payloads
+def test_bc_stages_compact_matches_dense_to_float_tolerance():
+    """Sum-monoid stages through the compacted path: Brandes forward σ
+    (halting) and backward δ (iterative but level-synchronous with
+    dense_frontier=False) must match the dense strategy to float tolerance
+    (the segment reduction reorders sum, unlike min/max)."""
+    import dataclasses
+    from repro.core.multistage import bc_backward_program, bc_forward_program
+
+    g = circulant_graph(256, degree=4)
+    D = 3
+    sources = jnp.array([0, 11, 57], jnp.int32)
+    lanes = jnp.arange(D)
+    fwd_part = DevicePartition.from_graph(g)
+    bwd_part = DevicePartition.from_graph(g, transpose=True)
+    results = {}
+    for strategy in ("dense", "compact"):
+        fwd = GREEngine(bc_forward_program(D), frontier=strategy)
+        bwd = GREEngine(bc_backward_program(D), dense_frontier=False,
+                        frontier=strategy)
+        assert (fwd._compaction_cap(fwd_part) is not None) == \
+            (strategy == "compact")
+        st = fwd.init_state(fwd_part)
+        st = EngineState(
+            st.vertex_data.at[sources, lanes].set(
+                jnp.array([0.0, 1.0], jnp.float32)),
+            st.scatter_data.at[sources, lanes].set(
+                jnp.array([1.0, 1.0, 1.0], jnp.float32)),
+            jnp.zeros(fwd_part.num_slots, dtype=bool).at[sources].set(True),
+            st.step)
+        out = fwd.run(fwd_part, st, 100)
+        depth, sigma = out.vertex_data[..., 0], out.vertex_data[..., 1]
+        dmax = jnp.max(jnp.where(jnp.isinf(depth), -1.0, depth))
+        part_b = dataclasses.replace(
+            bwd_part, aux={**bwd_part.aux, "depth": depth, "sigma": sigma,
+                           "dmax": dmax})
+        delta = bwd.run(part_b, bwd.init_state(part_b), 101).vertex_data
+        results[strategy] = (np.asarray(out.vertex_data), np.asarray(delta))
+    fix = lambda x: np.nan_to_num(x, posinf=1e30)
+    np.testing.assert_allclose(fix(results["dense"][0]),
+                               fix(results["compact"][0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(results["dense"][1], results["compact"][1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bc_batched_lanes_match_per_source_pipeline():
+    """Payload-batched Brandes == per-source runs of the same programs."""
+    from repro.core.multistage import betweenness_centrality
+    import networkx as nx
+    g = rmat_edges(scale=6, edge_factor=4, seed=9).dedup()
+    nxg = nx.DiGraph()
+    nxg.add_nodes_from(range(g.num_vertices))
+    nxg.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+    want = nx.betweenness_centrality(nxg, normalized=False)
+    ref = np.array([want[i] for i in range(g.num_vertices)])
+    # batch smaller than |V| forces multiple payload batches + ragged tail
+    got = betweenness_centrality(g, batch=24)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)

@@ -5,13 +5,11 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.partition import greedy_partition, hash_partition, partition_quality
+from repro.core.partition import greedy_partition, partition_quality
 from repro.core.vertex_program import MONOIDS, segment_combine
 from repro.graph.generators import erdos_renyi_edges
-from repro.graph.structures import Graph
 from repro.optim import compression
 
 

@@ -2,7 +2,6 @@
 generates, and the distributed graph engine solves a real workload through
 the full public API (the paper's PageRank-on-R-MAT scenario, CPU-scaled)."""
 import numpy as np
-import pytest
 
 
 def test_lm_training_reduces_loss():
