@@ -30,11 +30,17 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us: float, derived: str = "",
-         edges: Optional[int] = None):
+         edges: Optional[int] = None, gate: bool = True):
+    """`gate=False` marks entries whose ABSOLUTE time is scheduler-dominated
+    (e.g. multi-device runs on oversubscribed CI hosts): they stay in the
+    artifact for trend reading and still fail `compare.py` when missing,
+    but are exempt from the regression ratio gate."""
     rec = {"name": name, "us_per_call": round(us, 3)}
     if edges:
         rec["ns_per_edge"] = round(us * 1e3 / edges, 6)
     if derived:
         rec["derived"] = derived
+    if not gate:
+        rec["gate"] = False
     RESULTS.append(rec)
     print(f"{name},{us:.1f},{derived}", flush=True)

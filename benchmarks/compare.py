@@ -15,10 +15,15 @@ scans, an accidentally quadratic exchange) still sticks out.  Raw ratios
 are printed for trend reading.
 
 Entries whose baseline is under ``--min-us`` are reported but never gate
-(sub-millisecond timings are runner noise).  Benchmarks only in one file
-are listed as added/removed, never fatal — refresh the baseline by
-committing a trusted main-branch BENCH_ci.json artifact as
-BENCH_baseline.json.
+(sub-millisecond timings are runner noise), as are entries whose baseline
+record carries ``"gate": false`` (benchmarks whose absolute time is
+scheduler-dominated opt out at emit time — see ``benchmarks.common.emit``
+— but stay in the artifact for trend reading).  Benchmarks only in the
+current run are listed as added, never fatal; benchmarks present in the
+baseline but MISSING from the current run FAIL regardless of gating — a
+dropped benchmark would otherwise hide exactly the property it was
+recording.  Intentional removals ship with a baseline refresh: commit a
+trusted main-branch BENCH_ci.json artifact as BENCH_baseline.json.
 """
 from __future__ import annotations
 
@@ -53,24 +58,27 @@ def main(argv=None) -> int:
     # benchmarks only — sub-floor micro-benchmark jitter must not shift the
     # normalization that gates everything else; needs a few samples to be
     # meaningful, otherwise gate on raw ratios
-    solid = [r for n, r in ratios.items()
-             if base[n]["us_per_call"] >= args.min_us]
+    def gates(rec):
+        return rec["us_per_call"] >= args.min_us and rec.get("gate", True)
+
+    solid = [r for n, r in ratios.items() if gates(base[n])]
     speed = statistics.median(solid) if len(solid) >= 3 else 1.0
-    regressions, rows = [], []
+    regressions, missing, rows = [], [], []
     for name in sorted(set(base) | set(cur)):
         b, c = base.get(name), cur.get(name)
         if b is None:
             rows.append(f"  + {name}: new benchmark ({c['us_per_call']:.0f} us)")
             continue
         if c is None:
-            rows.append(f"  - {name}: missing from current run")
+            rows.append(f"  - {name}: MISSING from current run")
+            missing.append(name)
             continue
         ratio = ratios[name]
         norm = ratio / speed
-        gated = b["us_per_call"] >= args.min_us
+        gated = gates(b)
         flag = ""
         if norm > args.threshold:
-            flag = " REGRESSION" if gated else " (regressed, under noise floor)"
+            flag = " REGRESSION" if gated else " (regressed, ungated)"
             if gated:
                 regressions.append(name)
         rows.append(f"    {name}: {b['us_per_call']:.0f} -> "
@@ -80,11 +88,16 @@ def main(argv=None) -> int:
           f"noise floor {args.min_us:.0f} us, "
           f"machine-speed factor {speed:.2f}x")
     print("\n".join(rows))
+    if missing:
+        print(f"\nFAIL: {len(missing)} baseline benchmark(s) missing from "
+              f"the current run: {missing} — a dropped benchmark can't "
+              "gate; remove it from BENCH_baseline.json if intentional")
     if regressions:
         print(f"\nFAIL: {len(regressions)} regression(s) > "
               f"{args.threshold}x: {regressions}")
+    if missing or regressions:
         return 1
-    print("\nOK: no gated regressions")
+    print("\nOK: no gated regressions, no missing benchmarks")
     return 0
 
 

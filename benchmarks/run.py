@@ -14,14 +14,16 @@ import json
 import platform
 import sys
 
-from benchmarks import (bench_frontier, bench_gas_vs_sc, bench_memory,
-                        bench_pagerank, bench_partition, bench_traversal,
+from benchmarks import (bench_exchange_overlap, bench_frontier,
+                        bench_gas_vs_sc, bench_memory, bench_pagerank,
+                        bench_partition, bench_traversal,
                         bench_vector_combine, bench_weak, common)
 
 SUITES = {
     "pagerank": bench_pagerank.main,     # Table 5 / Fig. 8a-b
     "traversal": bench_traversal.main,   # Fig. 8c-d
     "frontier": bench_frontier.main,     # dense vs compacted frontier
+    "exchange_overlap": bench_exchange_overlap.main,  # §6.2 pipelined flush
     "weak": bench_weak.main,             # Fig. 10
     "partition": bench_partition.main,   # Fig. 11/12/13 + §5.1
     "memory": bench_memory.main,         # §7.1.2 memory claim
@@ -34,6 +36,8 @@ SUITES = {
 SMOKE = {
     "pagerank": lambda: bench_pagerank.run(scale=8, iters=2),
     "frontier": lambda: bench_frontier.run(scale=12, iters=2),
+    "exchange_overlap": lambda: bench_exchange_overlap.run(scale=10, k=2,
+                                                           steps=24, iters=9),
     "vector": lambda: bench_vector_combine.run(scale=8, d_feat=64, iters=2),
 }
 

@@ -30,8 +30,10 @@ print(f"|V|={g.num_vertices} |E|={g.num_edges} k={k} "
 
 ag = build_agent_graph(g, part, k)
 mesh = jax.make_mesh((k,), ("graph",))
+# pipelined exchange: the flush collective overlaps the local-tile combine
+# (docs/exchange.md); bitwise-identical results to exchange="agent"
 eng = DistGREEngine(algorithms.sssp_program(), mesh, ("graph",),
-                    exchange="agent", overlap=True)
+                    exchange="pipelined")
 
 # run 5 supersteps, snapshot, run to completion, then verify a restore
 state0 = eng.init_state(ag, source=0)

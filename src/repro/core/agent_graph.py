@@ -87,6 +87,112 @@ def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
     return out
 
 
+@dataclasses.dataclass
+class EdgeTile:
+    """One destination-class edge tile, stacked [k, width] (host-side)."""
+
+    src: np.ndarray
+    dst: np.ndarray                # compact destination index (see split)
+    mask: np.ndarray
+    props: Dict[str, np.ndarray]
+    csr_indptr: np.ndarray         # [k, num_slots + 1]
+    csr_eidx: np.ndarray           # [k, width]
+    csr_max_deg: int
+
+
+@dataclasses.dataclass
+class EdgeTileSplit:
+    """Static remote/local edge tiles for the pipelined exchange.
+
+    Each partition's edge shard is split ONCE at ingress by destination
+    class: `remote` holds the combiner-destined edges (their ⊕ partials
+    are what the flush collective carries), `local` the master-destined
+    ones.  The pipelined backend (`exchange.PipelinedAgentExchange`) scans
+    the remote tile first and issues the flush while the local tile
+    computes — total edge work stays E (the in-superstep `overlap=True`
+    rewrite scans all E edges twice).
+
+    Destination relabeling compacts the ⊕ segment spaces:
+
+      remote tile  dst ∈ [0, c_pad]   — combiner slot minus `cap + s_pad`;
+                                        padding lands on the identity slot
+                                        `c_pad`;
+      local  tile  dst ∈ [0, cap]     — the master slot unchanged; padding
+                                        lands on the identity slot `cap`.
+
+    Combiner indices inherit the owner-contiguous global order of
+    `comb_ids`, so each tile's combiner range is CONTIGUOUS PER DESTINATION
+    SHARD — the flush can take per-peer slices straight out of the remote
+    ⊕ array.  Both tiles keep the canonical dst-sorted edge order (they are
+    subsequences of it), preserving per-segment reduction order: min/max
+    results are bitwise-identical to the unsplit scan, sums reduce in the
+    same order.  Per-tile CSR position indices keep the frontier-compacted
+    scatter (`core/frontier.py`) available on both tiles.
+    """
+
+    remote: EdgeTile               # [k, er_pad] combiner-destined edges
+    local: EdgeTile                # [k, el_pad] master-destined edges
+    remote_fraction: float         # real remote edges / real edges
+
+
+def split_edge_tiles(ag: AgentGraph, pad_multiple: int = 8) -> EdgeTileSplit:
+    """Split each partition's edges into remote/local destination tiles.
+
+    Host-side (numpy) ingress pass; see `EdgeTileSplit` for the layout
+    contract.  Every real edge lands in exactly one tile: destinations are
+    either local masters (< cap) or combiners (>= cap + s_pad) — scatter
+    agents never terminate edges.
+    """
+    k, cap, s_pad, c_pad = ag.k, ag.cap, ag.s_pad, ag.c_pad
+    comb_base = cap + s_pad
+    sels = []
+    for i in range(k):
+        d = ag.dst[i]
+        real = ag.edge_mask[i]
+        is_comb = real & (d >= comb_base) & (d < ag.sink)
+        is_master = real & (d < cap)
+        assert np.array_equal(is_comb | is_master, real), \
+            "edge destinations must be masters or combiners"
+        sels.append((np.flatnonzero(is_comb), np.flatnonzero(is_master)))
+
+    er_pad = max(1, max(r.shape[0] for r, _ in sels))
+    el_pad = max(1, max(l.shape[0] for _, l in sels))
+    er_pad = -(-er_pad // pad_multiple) * pad_multiple
+    el_pad = -(-el_pad // pad_multiple) * pad_multiple
+    num_slots = ag.num_slots
+
+    def tile(width: int, junk_dst: int) -> EdgeTile:
+        return EdgeTile(
+            src=np.full((k, width), ag.sink, dtype=np.int32),
+            dst=np.full((k, width), junk_dst, dtype=np.int32),
+            mask=np.zeros((k, width), dtype=bool),
+            props={n: np.zeros((k, width), dtype=v.dtype)
+                   for n, v in ag.edge_props.items()},
+            csr_indptr=np.zeros((k, num_slots + 1), dtype=np.int32),
+            csr_eidx=np.zeros((k, width), dtype=np.int32),
+            csr_max_deg=0,
+        )
+
+    remote, local = tile(er_pad, c_pad), tile(el_pad, cap)
+    n_remote = n_real = 0
+    for i, (rsel, lsel) in enumerate(sels):
+        n_remote += rsel.shape[0]
+        n_real += rsel.shape[0] + lsel.shape[0]
+        for t, sel, shift in ((remote, rsel, comb_base), (local, lsel, 0)):
+            n = sel.shape[0]
+            t.src[i, :n] = ag.src[i, sel]
+            t.dst[i, :n] = ag.dst[i, sel] - shift
+            t.mask[i, :n] = True
+            for name, v in ag.edge_props.items():
+                t.props[name][i, :n] = v[i, sel]
+            t.csr_indptr[i], t.csr_eidx[i], deg = csr_layout(
+                t.src[i], t.mask[i], num_slots)
+            t.csr_max_deg = max(t.csr_max_deg, deg)
+
+    return EdgeTileSplit(remote=remote, local=local,
+                         remote_fraction=n_remote / max(n_real, 1))
+
+
 def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
                       owner: Optional[np.ndarray] = None,
                       pad_multiple: int = 8,

@@ -14,6 +14,14 @@ engine — with a pluggable ExchangeBackend supplying the communication:
   exchange="dense"  → DenseExchange: hash-partition/Pregel baseline, a
       collective ⊕ over the full relabeled vertex vector; used as the
       communication baseline in benchmarks and rooflines.
+  exchange="pipelined" → PipelinedAgentExchange: the Agent-Graph protocol
+      over a static ingress-time remote/local edge split
+      (`agent_graph.split_edge_tiles`), run through the restructured
+      `GREEngine.run_pipelined` loop — the flush collective for superstep i
+      is issued before the local-tile combine and merged at the top of
+      superstep i+1 (double-buffered `Mailbox`), overlapping communication
+      with computation (paper §6.2) at E edge-scans per superstep where
+      `overlap=True` needs 2·E.
 
 This module owns only backend selection, host→device topology layout, and
 state relabeling; all superstep logic lives in engine.py/exchange.py.
@@ -27,22 +35,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.agent_graph import AgentGraph
+from repro.core.agent_graph import AgentGraph, split_edge_tiles
 from repro.core.engine import DevicePartition, EngineState, GREEngine
 from repro.core.exchange import (AgentExchange, DenseExchange, NullExchange,
+                                 PipelinedAgentExchange, PipelineTiles,
                                  ShardTopology, flush_combiners,
                                  refresh_scatter_agents)
 from repro.core.vertex_program import VertexProgram
 from repro.dist.sharding import shard_map
 
-__all__ = ["DistGREEngine", "ShardTopology", "flush_combiners",
-           "refresh_scatter_agents"]
+__all__ = ["DistGREEngine", "PipelineTiles", "PipelinedAgentExchange",
+           "ShardTopology", "flush_combiners", "refresh_scatter_agents",
+           "split_edge_tiles"]
 
 
 class DistGREEngine:
     """Runs a VertexProgram over an AgentGraph on a device mesh."""
 
-    EXCHANGES = ("agent", "dense", "null")
+    EXCHANGES = ("agent", "dense", "null", "pipelined")
 
     def __init__(self, program: VertexProgram, mesh: Mesh,
                  axis_names: Tuple[str, ...] = ("graph",),
@@ -75,32 +85,91 @@ class DistGREEngine:
             return DenseExchange(topo, self.axes, self.program.monoid,
                                  my_row=jax.lax.axis_index(self.axes),
                                  dense_frontier=self.local.dense_frontier)
+        if self.exchange == "pipelined":
+            return PipelinedAgentExchange(topo, self.axes,
+                                          self.program.monoid,
+                                          dense_frontier=self.local.dense_frontier)
         return AgentExchange(topo, self.axes, self.program.monoid,
                              dense_frontier=self.local.dense_frontier,
                              overlap=self.overlap)
 
     # ----------------------------------------------------------- host → device
     def device_topology(self, ag: AgentGraph):
-        """Stacked arrays [k, ...]; shard_map splits row i to device i."""
-        part = DevicePartition(
-            src=jnp.asarray(ag.src), dst=jnp.asarray(ag.dst),
-            edge_mask=jnp.asarray(ag.edge_mask),
-            num_masters=ag.cap, num_slots=ag.num_slots,
-            edges_sorted_by_dst=True,
-            edge_props={n: jnp.asarray(v) for n, v in ag.edge_props.items()},
-            aux={"out_degree": jnp.asarray(ag.out_degree),
-                 "global_id": jnp.asarray(
-                     ag.new2old.reshape(ag.k, ag.cap).astype(np.float32))},
-            csr_indptr=jnp.asarray(ag.csr_indptr),
-            csr_eidx=jnp.asarray(ag.csr_eidx),
-            csr_max_deg=ag.csr_max_deg,
-        )
+        """Stacked arrays [k, ...]; shard_map splits row i to device i.
+
+        With `exchange="pipelined"` every edge scan runs on the split tiles
+        (`ShardTopology.tiles`); the canonical part then carries only the
+        statics + aux that apply needs and placeholder edge columns —
+        shipping the full columns twice would double per-device edge
+        memory for arrays the pipelined path never reads.
+        """
+        aux = {"out_degree": jnp.asarray(ag.out_degree),
+               "global_id": jnp.asarray(
+                   ag.new2old.reshape(ag.k, ag.cap).astype(np.float32))}
+        if self.exchange == "pipelined":
+            part = DevicePartition(
+                src=jnp.full((ag.k, 1), ag.sink, jnp.int32),
+                dst=jnp.full((ag.k, 1), ag.sink, jnp.int32),
+                edge_mask=jnp.zeros((ag.k, 1), dtype=bool),
+                num_masters=ag.cap, num_slots=ag.num_slots,
+                edges_sorted_by_dst=True, aux=aux,
+            )
+            tiles = self._pipeline_tiles(ag)
+        else:
+            part = DevicePartition(
+                src=jnp.asarray(ag.src), dst=jnp.asarray(ag.dst),
+                edge_mask=jnp.asarray(ag.edge_mask),
+                num_masters=ag.cap, num_slots=ag.num_slots,
+                edges_sorted_by_dst=True,
+                edge_props={n: jnp.asarray(v)
+                            for n, v in ag.edge_props.items()},
+                aux=aux,
+                csr_indptr=jnp.asarray(ag.csr_indptr),
+                csr_eidx=jnp.asarray(ag.csr_eidx),
+                csr_max_deg=ag.csr_max_deg,
+            )
+            tiles = None
         return ShardTopology(
             part=part,
             comb_send_slot=jnp.asarray(ag.comb_send_slot),
             comb_recv_master=jnp.asarray(ag.comb_recv_master),
             scat_send_master=jnp.asarray(ag.scat_send_master),
             scat_recv_slot=jnp.asarray(ag.scat_recv_slot),
+            tiles=tiles,
+        )
+
+    def _pipeline_tiles(self, ag: AgentGraph) -> PipelineTiles:
+        """Stacked remote/local edge tiles + compact-space exchange indices.
+
+        Exchange-index remapping rides the slot layout: combiner slots start
+        at `cap + s_pad` and the padding fill is the sink
+        (`cap + s_pad + c_pad`), so a uniform subtraction sends real slots
+        to `[0, c_pad)` and fills to exactly `c_pad` — the remote tile's
+        identity slot.  Receive-side master slots keep their index; sink
+        fills clamp to `cap`, the local identity slot.
+        """
+        split = split_edge_tiles(ag)
+        comb_base = ag.cap + ag.s_pad
+
+        def tile_part(t):
+            return DevicePartition(
+                src=jnp.asarray(t.src), dst=jnp.asarray(t.dst),
+                edge_mask=jnp.asarray(t.mask),
+                num_masters=ag.cap, num_slots=ag.num_slots,
+                edges_sorted_by_dst=True,
+                edge_props={n: jnp.asarray(v) for n, v in t.props.items()},
+                csr_indptr=jnp.asarray(t.csr_indptr),
+                csr_eidx=jnp.asarray(t.csr_eidx),
+                csr_max_deg=t.csr_max_deg,
+            )
+
+        return PipelineTiles(
+            part_remote=tile_part(split.remote),
+            part_local=tile_part(split.local),
+            comb_send_compact=jnp.asarray(ag.comb_send_slot - comb_base),
+            comb_recv_master=jnp.asarray(
+                np.minimum(ag.comb_recv_master, ag.cap)),
+            num_combiners=ag.c_pad,
         )
 
     def init_state(self, ag: AgentGraph, source=None):
@@ -149,15 +218,23 @@ class DistGREEngine:
         def unsqueeze0(tree):
             return jax.tree.map(lambda a: a[None] if hasattr(a, "ndim") else a, tree)
 
+        def glob_any(s):
+            any_active = jnp.any(s.active_scatter)
+            return jax.lax.pmax(any_active.astype(jnp.int32), self.axes) > 0
+
         def run_shard(topo_stack, state_stack):
             topo_l = squeeze0(topo_stack)
             state_l = squeeze0(state_stack)
             backend = self.make_exchange(topo_l)
 
+            if hasattr(backend, "local_phase"):  # pipelined loop (engine.py)
+                out = self.local.run_pipelined(topo_l.part, state_l, backend,
+                                               max_steps=max_steps,
+                                               any_active=glob_any)
+                return unsqueeze0(out)
+
             def cond(s):
-                any_active = jnp.any(s.active_scatter)
-                glob = jax.lax.pmax(any_active.astype(jnp.int32), self.axes)
-                return (s.step < max_steps) & (glob > 0)
+                return (s.step < max_steps) & glob_any(s)
 
             def body(s):
                 return self.local.superstep(topo_l.part, s, backend)

@@ -20,6 +20,12 @@ Message payloads are first-class feature vectors: state arrays are
 
 The distributed engine (`repro.core.dist_engine`) runs this same superstep
 per shard with an AgentExchange or DenseExchange backend under shard_map.
+
+Backends that expose `local_phase`/`merge` (PipelinedAgentExchange) run
+through `run_pipelined` instead: the loop body is restructured into
+local-phase / flush / merge stages, with the merge of superstep i's remote
+contributions deferred to the top of superstep i+1 so the flush collective
+overlaps the local-tile combine (paper §6.2).
 """
 from __future__ import annotations
 
@@ -291,6 +297,67 @@ class GREEngine:
             return self.superstep(part, s)
 
         return jax.lax.while_loop(cond, body, state)
+
+    # --------------------------------------------------------- pipelined run
+    def run_pipelined(self, part: DevicePartition, state: EngineState,
+                      exchange, max_steps: int = 100,
+                      any_active=None) -> EngineState:
+        """Pipelined BSP loop for backends with `local_phase`/`merge`.
+
+        The synchronous loop is refresh → combine+flush+merge → apply, with
+        the flush a barrier in the middle of every superstep.  Here the
+        superstep is cut into stages and re-seamed across iterations:
+
+          carry_i = (state_i refreshed, Mailbox(local_i, flushed_i))
+          body:    merge mailbox  → apply_i → refresh_{i+1}
+                   → remote combine + flush issue + local combine (i+1)
+
+        so the flush collective issued for superstep i+1 has the whole
+        local-tile combine between it and its consumer (the merge at the
+        top of iteration i+2) — the largest legal overlap window, since
+        `refresh_{i+1}` transitively depends on `flushed_i` through
+        `apply_i`.  ⊕-equivalence with the synchronous loop is exact: the
+        same partial combines are folded, only later.
+
+        `any_active` overrides the termination predicate (the distributed
+        engine passes the mesh-global pmax so all shards exit together and
+        the collectives inside local_phase stay matched).  The apply count
+        and final state match `run` exactly.  local_phase runs under a
+        `lax.cond` on the continuation predicate, so the run never pays
+        for edge scans or a flush collective whose mailbox would be
+        discarded (the final iteration, and the no-active-source case) —
+        the predicate is computed ONCE per iteration (post-apply, carried
+        into the loop cond) and is mesh-uniform, so every shard takes the
+        same branch and the collectives stay matched.  Evaluating it on
+        the pre-refresh state is sound: apply zeroes agent-slot activity,
+        so the global any over masters is what refresh would mirror.
+        """
+        from repro.core.exchange import Mailbox
+        anyfn = any_active or (lambda s: jnp.any(s.active_scatter))
+        p = self.program
+        idm = jnp.full((part.num_masters + 1,) + tuple(p.payload_shape),
+                       p.monoid.identity, p.msg_dtype)
+
+        def keep_going(s):
+            return (s.step < max_steps) & anyfn(s)
+
+        def phase(s):
+            s = exchange.refresh(s)
+            return s, exchange.local_phase(self, s)
+
+        def phase_if(go, s, mailbox):
+            return jax.lax.cond(go, phase, lambda ss: (ss, mailbox), s)
+
+        def body(carry):
+            s, mailbox, _ = carry
+            s = self.apply(part, s, exchange.merge(mailbox))
+            go = keep_going(s)
+            return phase_if(go, s, mailbox) + (go,)
+
+        go0 = keep_going(state)
+        carry0 = phase_if(go0, state, Mailbox(local=idm, flushed=idm)) + (go0,)
+        final, _, _ = jax.lax.while_loop(lambda c: c[2], body, carry0)
+        return final
 
     # ------------------------------------------------- GAS baseline (ablation)
     def gas_superstep(self, part: DevicePartition, state: EngineState,

@@ -14,16 +14,34 @@ partial combines cross device boundaries.  This module isolates that seam:
                    computation overlap, as an XLA scheduling hint).
   DenseExchange  — hash-partition/Pregel baseline: ⊕-reduce the full
                    relabeled vertex vector with a collective (psum/pmin/pmax).
+  PipelinedAgentExchange — the Agent-Graph protocol restructured for
+                   communication/computation overlap (paper §6.2): edges are
+                   split ONCE at ingress into remote-destined and
+                   local-destined tiles (`agent_graph.split_edge_tiles`);
+                   each superstep ⊕-combines the remote tile first, issues
+                   the flush collective, then combines the local tile while
+                   the collective is in flight.  The two partial combines
+                   ride a two-slot `Mailbox` so the merge can be deferred to
+                   the top of the NEXT superstep (`GREEngine.run_pipelined`).
 
-All three speak first-class feature-vector payloads: state and message
+All backends speak first-class feature-vector payloads: state and message
 arrays are `[slots, *payload_shape]`; scalars are the `payload_shape=()`
 special case.  Backends are plain callables on jnp arrays, usable inside
-`shard_map` (Agent/Dense) or outside any mesh (Null).
+`shard_map` (Agent/Dense/Pipelined) or outside any mesh (Null).
+
+A doctest for the master-slot mask helper (masters are renumbered first,
+agents live high — paper §6.1.1):
+
+    >>> import jax.numpy as jnp
+    >>> bool(_master_mask(jnp.zeros((4, 2)), 2)[2, 0])
+    False
+    >>> [bool(b) for b in _master_mask(jnp.zeros(3), 2)]
+    [True, True, False]
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Protocol, runtime_checkable
+from typing import TYPE_CHECKING, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +54,43 @@ if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a cycle
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
+class PipelineTiles:
+    """Device-local remote/local edge tiles for PipelinedAgentExchange.
+
+    Built at ingress from `agent_graph.split_edge_tiles`: `part_remote`
+    carries the combiner-destined edges with dst relabeled into the compact
+    combiner space `[0, num_combiners]`, `part_local` the master-destined
+    edges (`[0, num_masters]`); index `num_combiners`/`num_masters` is the
+    padding identity slot of each tile.  The exchange indices are the same
+    per-peer layout as `ShardTopology`'s, remapped into those compact
+    spaces.
+    """
+
+    part_remote: "DevicePartition"   # combiner-destined edge tile
+    part_local: "DevicePartition"    # master-destined edge tile
+    comb_send_compact: jnp.ndarray   # [k, x_pad] into the remote ⊕ array
+    comb_recv_master: jnp.ndarray    # [k, x_pad] master slot; fill = cap
+    num_combiners: int = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Mailbox:
+    """Two-slot superstep buffer carried through the pipelined loop.
+
+    Slot `flushed` holds the in-flight remote contributions (the flush
+    collective's landing buffer); slot `local` holds the local-tile partial
+    ⊕.  `PipelinedAgentExchange.merge` folds the two at the top of the next
+    superstep — legal because ⊕ is commutative/associative, so remote and
+    local partials can be combined in either order.
+    """
+
+    local: jnp.ndarray    # [num_masters + 1, *payload]
+    flushed: jnp.ndarray  # [num_masters + 1, *payload]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
 class ShardTopology:
     """Device-local (inside shard_map) view of one AgentGraph partition."""
 
@@ -44,6 +99,7 @@ class ShardTopology:
     comb_recv_master: jnp.ndarray  # [k, x_pad]
     scat_send_master: jnp.ndarray  # [k, x_pad]
     scat_recv_slot: jnp.ndarray    # [k, x_pad]
+    tiles: Optional[PipelineTiles] = None  # pipelined-exchange edge split
 
 
 def _master_mask(combined: jnp.ndarray, num_masters: int) -> jnp.ndarray:
@@ -79,19 +135,25 @@ def refresh_scatter_agents(topo: ShardTopology, scatter_data: jnp.ndarray,
 
 
 def flush_combiners(topo: ShardTopology, combined: jnp.ndarray, axes,
-                    monoid: Monoid) -> jnp.ndarray:
+                    monoid: Monoid, send_slot: Optional[jnp.ndarray] = None,
+                    recv_master: Optional[jnp.ndarray] = None,
+                    num_segments: Optional[int] = None) -> jnp.ndarray:
     """Exchange 2 (combiner → master): ONE ⊕-reduced value per agent.
 
-    Returns a [num_slots, *D] array of remote contributions folded into
-    local master slots (identity elsewhere).
+    Returns a [num_segments, *D] array of remote contributions folded into
+    local master slots (identity elsewhere).  By default `combined` is the
+    full slot space and the topology's exchange indices apply; the
+    pipelined backend passes its compact-space indices and the
+    `[num_masters + 1]` segment count instead (`PipelineTiles`).
     """
-    vals = jnp.take(combined, topo.comb_send_slot, axis=0)          # [k, x, *D]
+    send = topo.comb_send_slot if send_slot is None else send_slot
+    recv = topo.comb_recv_master if recv_master is None else recv_master
+    vals = jnp.take(combined, send, axis=0)                         # [k, x, *D]
     rec = jax.lax.all_to_all(vals, axes, split_axis=0, concat_axis=0,
                              tiled=True)
     flat = rec.reshape((-1,) + rec.shape[2:])
-    return segment_combine(flat.astype(combined.dtype),
-                           topo.comb_recv_master.reshape(-1),
-                           topo.part.num_slots, monoid)
+    return segment_combine(flat.astype(combined.dtype), recv.reshape(-1),
+                           num_segments or topo.part.num_slots, monoid)
 
 
 @runtime_checkable
@@ -100,8 +162,10 @@ class ExchangeBackend(Protocol):
 
     `refresh` runs before the local scatter-combine (push master scatter
     state to remote readers); `reduce` produces the fully ⊕-combined
-    [num_slots, *payload] array the apply phase folds (identity outside
-    master slots).
+    array the apply phase folds — at least `[num_masters, *payload]` rows
+    (apply reads only master slots; Null/Agent/Dense return the full
+    `[num_slots]` slot space, the pipelined backend the compact
+    `[num_masters + 1]` master space).
     """
 
     def refresh(self, state: "EngineState") -> "EngineState": ...
@@ -222,3 +286,68 @@ class DenseExchange(_RefreshingExchange):
         mine = jax.lax.dynamic_slice_in_dim(total, myslice, cap, axis=0)
         return jnp.full((part.num_slots,) + payload, monoid.identity,
                         dtype).at[:cap].set(mine)
+
+
+class PipelinedAgentExchange(_RefreshingExchange):
+    """Double-buffered Agent-Graph exchange (paper §6.2 overlap, pipelined).
+
+    Protocol per superstep, over the static ingress-time edge split
+    (`ShardTopology.tiles`):
+
+      local_phase  — ⊕-combine the remote-destined tile into the compact
+                     combiner space, ISSUE the flush collective, then
+                     ⊕-combine the local-destined tile while the collective
+                     is in flight; both partials return in a `Mailbox`.
+      merge        — fold `Mailbox.local ⊕ Mailbox.flushed` into the master
+                     contributions; deferred to the top of the next
+                     superstep by `GREEngine.run_pipelined`, which carries
+                     the mailbox through the loop.
+
+    Compared to `AgentExchange(overlap=True)` — which rewrites `dst` to
+    split the SAME edge array twice, scanning 2·E edges per superstep —
+    the tiles scan each edge exactly once and ⊕-reduce into
+    `[num_masters + 1]` / `[num_combiners + 1]` segment spaces instead of
+    the full `[num_slots]` slot space.  Results are bitwise-identical to
+    the synchronous `AgentExchange` for min/max monoids (the tiles preserve
+    the canonical per-segment reduction order; sums agree to the same order
+    too, but cross-backend float guarantees stay at tolerance).
+
+    `reduce` merges immediately, so the backend also drops into the
+    standard synchronous superstep (used by the equivalence tests to
+    isolate the loop restructure from the edge split).
+    """
+
+    def __init__(self, topo: ShardTopology, axes, monoid: Monoid,
+                 dense_frontier: bool = False):
+        super().__init__(topo, axes, monoid, dense_frontier)
+        assert topo.tiles is not None, \
+            "PipelinedAgentExchange needs ShardTopology.tiles " \
+            "(agent_graph.split_edge_tiles)"
+        self.tiles = topo.tiles
+
+    def local_phase(self, engine: "GREEngine", state: "EngineState") -> Mailbox:
+        """Remote-tile combine + flush issue, then local-tile combine.
+
+        The flush is `flush_combiners` with the compact-space indices: the
+        send gather reads the compact combiner ⊕ array and the receive
+        folds into `[num_masters + 1]` (identity slot last) — same wire
+        traffic, ONE ⊕-reduced message per combiner agent.
+        """
+        t = self.tiles
+        masters = self.topo.part.num_masters
+        remote = engine.scatter_combine(t.part_remote, state,
+                                        num_segments=t.num_combiners + 1)
+        flushed = flush_combiners(self.topo, remote, self.axes, self.monoid,
+                                  send_slot=t.comb_send_compact,
+                                  recv_master=t.comb_recv_master,
+                                  num_segments=masters + 1)
+        local = engine.scatter_combine(t.part_local, state,
+                                       num_segments=masters + 1)
+        return Mailbox(local=local, flushed=flushed)
+
+    def merge(self, mailbox: Mailbox) -> jnp.ndarray:
+        """⊕ the two mailbox slots: [num_masters + 1, *payload]."""
+        return self.monoid.op(mailbox.local, mailbox.flushed)
+
+    def reduce(self, engine, part, state):
+        return self.merge(self.local_phase(engine, state))

@@ -24,6 +24,16 @@ instead of silently dropping vertices.
 The compacted combine always takes the XLA scatter-reduce: its `dst` tile
 is data-dependent (gathered per superstep), and the Pallas kernel needs the
 static ingress-time block table (`kernels.segment_combine`).
+
+Edge tiles compose with the exchange layer's edge splits: a
+`DevicePartition` whose columns hold only a destination CLASS — the
+pipelined exchange's per-destination-shard remote tile or master-local tile
+(`agent_graph.split_edge_tiles`), or the in-superstep `dst`-rewrite of
+`AgentExchange(overlap=True)` — flows through unchanged, because
+`gather_frontier_edge_tile` resolves CSR positions via `csr_eidx` into
+whatever `dst`/`edge_props` columns the partition carries, and the ⊕
+segment space is the caller's `num_segments` (compact combiner/master
+spaces for the split tiles, full slot space otherwise).
 """
 from __future__ import annotations
 
@@ -50,6 +60,31 @@ def default_cap(num_slots: int) -> int:
     return min(num_slots, -(-cap // 8) * 8)
 
 
+def gather_frontier_edge_tile(part: "DevicePartition", frontier: jnp.ndarray,
+                              cap: int):
+    """Gather the frontier slots' out-edge ranges into a padded edge tile.
+
+    `frontier` is the fixed-capacity active-slot list (`[cap]`, fill value
+    `part.num_slots` — its `indptr` lookup clamps to a zero-length range).
+    Returns `(eid, valid)`: `eid [cap, max_deg]` are POSITIONS into the
+    partition's canonical edge columns (`part.dst[eid]`,
+    `part.edge_props[...][eid]`), `valid` masks the ragged lanes.  Because
+    positions — not copies — are returned, the tile follows whatever
+    destination columns the partition carries: the full dst-sorted slot
+    space, the pipelined exchange's compact per-destination-class tiles,
+    or the overlap exchange's in-superstep `dst` rewrite.
+    """
+    slots = part.num_slots
+    max_deg = part.csr_max_deg
+    start = part.csr_indptr[frontier]                    # clamped gather
+    end = part.csr_indptr[jnp.minimum(frontier + 1, slots)]
+    deg = end - start                                    # [cap], 0 on fills
+    col = jnp.arange(max_deg, dtype=jnp.int32)
+    valid = col[None, :] < deg[:, None]                  # [cap, max_deg]
+    pos = jnp.where(valid, start[:, None] + col[None, :], 0)
+    return part.csr_eidx[pos], valid
+
+
 def compact_scatter_combine(program: "VertexProgram", part: "DevicePartition",
                             state: "EngineState", num_segments: int,
                             cap: int) -> jnp.ndarray:
@@ -60,19 +95,10 @@ def compact_scatter_combine(program: "VertexProgram", part: "DevicePartition",
     the segment reduction).  Callers must guard `|frontier| <= cap`.
     """
     p = program
-    slots = part.num_slots
     max_deg = part.csr_max_deg
-    # Fixed-capacity compaction; fill slots index = `slots`, whose indptr
-    # lookup below clamps to a zero-length range.
     (frontier,) = jnp.nonzero(state.active_scatter, size=cap,
-                              fill_value=slots)
-    start = part.csr_indptr[frontier]                    # clamped gather
-    end = part.csr_indptr[jnp.minimum(frontier + 1, slots)]
-    deg = end - start                                    # [cap], 0 on fills
-    col = jnp.arange(max_deg, dtype=jnp.int32)
-    valid = col[None, :] < deg[:, None]                  # [cap, max_deg]
-    pos = jnp.where(valid, start[:, None] + col[None, :], 0)
-    eid = part.csr_eidx[pos]            # positions in the dst-sorted columns
+                              fill_value=part.num_slots)
+    eid, valid = gather_frontier_edge_tile(part, frontier, cap)
     dst = part.dst[eid]                 # invalid lanes carry identity msgs
     gathered = jnp.take(state.scatter_data, frontier, axis=0,
                         fill_value=p.monoid.identity)    # [cap, *S]

@@ -155,6 +155,9 @@ class PartitionQuality:
     agents_per_vertex: float       # cut-factor for Agent-Graph (Fig. 12b/13b)
     equivalent_edge_cut: float     # agents / E (Fig. 11b)
     scatter_rate: float            # scatters / (scatters + combiners) skew
+    remote_dst_edge_fraction: float  # edges terminating at a combiner agent:
+    # the ⊕ partials the pipelined exchange overlaps with local compute
+    # (exchange="pipelined"; see agent_graph.split_edge_tiles)
     vertexcut_replicas: int        # PowerGraph replicas R for same placement
     vertexcut_cut_factor: float    # 2 * (R - V) / V (paper §7.2)
     vertexcut_comm: int            # 2 * (R - V) messages per superstep
@@ -205,6 +208,8 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
         agents_per_vertex=agents / V,
         equivalent_edge_cut=agents / max(E, 1),
         scatter_rate=n_scatter / max(agents, 1),
+        remote_dst_edge_fraction=float(
+            np.mean(owner[graph.dst] != edge_part)) if E else 0.0,
         vertexcut_replicas=replicas,
         vertexcut_cut_factor=2.0 * mirrors / V,
         vertexcut_comm=2 * mirrors,

@@ -119,8 +119,10 @@ def csr_layout(src: np.ndarray, edge_mask: np.ndarray, num_slots: int
     slot.  Rather than duplicating the edge columns in src-sorted order, we
     return a POSITION index: `eidx[p]` is where the p-th src-sorted real edge
     lives in the original padded arrays, so `dst[eidx]`/`props[eidx]` read
-    the canonical columns (and stay consistent when callers rewrite `dst`,
-    e.g. the overlap exchange's remote/local split).
+    the canonical columns (and stay consistent when callers rewrite `dst` —
+    the overlap exchange's in-superstep remote/local split — or hand in
+    per-destination-class tiles with their own layouts, as the pipelined
+    exchange's `agent_graph.split_edge_tiles` does).
 
     Returns `(indptr [num_slots+1], eidx [E_pad], max_deg)`.  Padded edges
     (mask False) are excluded — every slot's range covers real edges only,

@@ -1,0 +1,84 @@
+"""The CI perf gate (benchmarks/compare.py): regression and missing-key
+semantics.  Runs the comparator in-process on synthetic result files."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import compare  # noqa: E402
+
+
+def _write(path, names_us, ungated=()):
+    payload = {"results": [
+        {"name": n, "us_per_call": us, **({"gate": False} if n in ungated
+                                          else {})}
+        for n, us in names_us.items()]}
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+BASE = {"a": 10000.0, "b": 20000.0, "c": 30000.0, "tiny": 100.0}
+
+
+def test_gate_passes_on_parity(tmp_path):
+    base = _write(tmp_path / "base.json", BASE)
+    cur = _write(tmp_path / "cur.json", BASE)
+    assert compare.main([base, cur]) == 0
+
+
+def test_gate_fails_on_relative_regression(tmp_path):
+    base = _write(tmp_path / "base.json", BASE)
+    cur = _write(tmp_path / "cur.json",
+                 {**BASE, "b": BASE["b"] * 4})  # b regresses vs the rest
+    assert compare.main([base, cur]) == 1
+
+
+def test_gate_normalizes_uniform_machine_drift(tmp_path):
+    """A uniformly 2x-slower runner is machine drift, not a regression."""
+    base = _write(tmp_path / "base.json", BASE)
+    cur = _write(tmp_path / "cur.json",
+                 {n: us * 2 for n, us in BASE.items()})
+    assert compare.main([base, cur]) == 0
+
+
+def test_gate_fails_on_missing_benchmark(tmp_path):
+    """A benchmark present in the baseline but dropped from the run must
+    FAIL — silently vanishing benchmarks would hide the regressions they
+    were gating."""
+    base = _write(tmp_path / "base.json", BASE)
+    cur = _write(tmp_path / "cur.json",
+                 {n: us for n, us in BASE.items() if n != "b"})
+    assert compare.main([base, cur]) == 1
+
+
+def test_gate_missing_subfloor_benchmark_still_fails(tmp_path):
+    """Missing-key detection is not subject to the noise floor."""
+    base = _write(tmp_path / "base.json", BASE)
+    cur = _write(tmp_path / "cur.json",
+                 {n: us for n, us in BASE.items() if n != "tiny"})
+    assert compare.main([base, cur]) == 1
+
+
+def test_gate_added_benchmark_is_not_fatal(tmp_path):
+    base = _write(tmp_path / "base.json", BASE)
+    cur = _write(tmp_path / "cur.json", {**BASE, "new": 5000.0})
+    assert compare.main([base, cur]) == 0
+
+
+def test_gate_false_entry_never_ratio_gates(tmp_path):
+    """Entries opted out at emit time ('gate': false) are exempt from the
+    regression gate even when above the noise floor..."""
+    base = _write(tmp_path / "base.json", BASE, ungated=("b",))
+    cur = _write(tmp_path / "cur.json", {**BASE, "b": BASE["b"] * 4},
+                 ungated=("b",))
+    assert compare.main([base, cur]) == 0
+
+
+def test_gate_false_entry_missing_still_fails(tmp_path):
+    """...but dropping them from the run still fails — the trajectory
+    record must not silently vanish."""
+    base = _write(tmp_path / "base.json", BASE, ungated=("b",))
+    cur = _write(tmp_path / "cur.json",
+                 {n: us for n, us in BASE.items() if n != "b"})
+    assert compare.main([base, cur]) == 1

@@ -1,0 +1,64 @@
+"""Docs hygiene: the link checker passes on the repo's own docs, and its
+failure modes actually fail (dead links, wiki refs, missing repo paths)."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from tools import check_docs  # noqa: E402
+
+
+def test_repo_docs_have_no_dead_references(capsys):
+    assert check_docs.main(["--root", str(ROOT)]) == 0
+    out = capsys.readouterr().out
+    assert "0 dead reference(s)" in out
+
+
+def test_docs_index_exists_and_links_every_doc():
+    docs = ROOT / "docs"
+    index = (docs / "README.md").read_text()
+    for doc in docs.glob("*.md"):
+        if doc.name != "README.md":
+            assert f"({doc.name})" in index, f"docs/README.md misses {doc.name}"
+
+
+def _run(tmp_path, text):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "page.md").write_text(text)
+    return check_docs.main(["--root", str(tmp_path)])
+
+
+def test_dead_markdown_link_fails(tmp_path):
+    assert _run(tmp_path, "see [other](missing.md)") == 1
+
+
+def test_anchor_and_external_links_pass(tmp_path):
+    assert _run(tmp_path, "[a](#section) [b](https://example.com/x.md) "
+                          "[self](page.md)") == 0
+
+
+def test_unresolved_wiki_ref_fails(tmp_path):
+    assert _run(tmp_path, "as described in [[nonexistent-doc]]") == 1
+
+
+def test_wiki_ref_to_sibling_doc_passes(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "other.md").write_text("hi")
+    (tmp_path / "docs" / "page.md").write_text("see [[other]]")
+    assert check_docs.main(["--root", str(tmp_path)]) == 0
+
+
+def test_missing_repo_path_fails(tmp_path):
+    assert _run(tmp_path, "the hot loop is `src/made/up/file.py`") == 1
+
+
+def test_existing_repo_path_passes(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "real.py").write_text("")
+    assert _run(tmp_path, "see `src/real.py` (globs like docs/*.md skip)") == 0
+
+
+def test_empty_docs_dir_fails(tmp_path):
+    (tmp_path / "docs").mkdir()
+    assert check_docs.main(["--root", str(tmp_path)]) == 1

@@ -1,7 +1,7 @@
 """Frontier-compacted scatter vs the dense masked scan, and multi-source
 payload batching vs independent single-source runs.
 
-Equivalence contract (docs/engine.md "Frontier strategies"): for min-monoid
+Equivalence contract (docs/frontier.md): for min-monoid
 traversal programs the two strategies must produce BITWISE-identical
 vertex_data — min is exactly associative/commutative, so even the segment
 reduction order cannot leak through.

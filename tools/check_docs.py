@@ -1,0 +1,91 @@
+"""Docs link/reference checker (CI `docs` job).
+
+  python tools/check_docs.py [--docs docs] [--root .]
+
+Scans every `docs/*.md` for three kinds of references and exits non-zero
+if any is dead, so stale docs fail the build instead of rotting:
+
+  * markdown links `[text](target)` — http(s)/mailto targets are skipped;
+    everything else (with any `#anchor` stripped) must exist relative to
+    the doc's directory or the repo root;
+  * wiki-style refs `[[name]]` — must name another doc (`docs/<name>.md`);
+  * repo paths in prose/backticks — any token shaped like
+    `dir/sub/file.ext` with a known extension must exist relative to the
+    repo root (tokens containing glob/placeholder characters are skipped).
+
+No dependencies beyond the standard library.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+WIKI_REF = re.compile(r"\[\[([^\]]+)\]\]")
+# dir/file.ext tokens in prose or backticks; extensions kept deliberately
+# narrow to avoid false positives on things like version numbers
+REPO_PATH = re.compile(
+    r"(?<![\w/.])((?:[\w-]+/)+[\w.-]+\."
+    r"(?:py|md|json|yml|yaml|toml|ini|txt|sh))(?![\w/])")
+PLACEHOLDER = re.compile(r"[*<>{}$]")
+
+
+def check_file(doc: Path, docs_dir: Path, root: Path) -> list:
+    text = doc.read_text()
+    errors = []
+
+    def exists(rel: str, base: Path) -> bool:
+        return (base / rel).exists() or (root / rel).exists()
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:  # pure #anchor link
+            continue
+        if not exists(path, doc.parent):
+            errors.append(f"{doc}: dead link ({target})")
+
+    for m in WIKI_REF.finditer(text):
+        name = m.group(1).split("|", 1)[0].split("#", 1)[0].strip()
+        if not (docs_dir / f"{name}.md").exists():
+            errors.append(f"{doc}: unresolved wiki ref [[{name}]]")
+
+    for m in REPO_PATH.finditer(text):
+        token = m.group(1)
+        if PLACEHOLDER.search(token):
+            continue
+        if not exists(token, doc.parent):
+            errors.append(f"{doc}: missing repo path ({token})")
+
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--docs", default="docs", help="docs directory to scan")
+    ap.add_argument("--root", default=".", help="repo root for path refs")
+    args = ap.parse_args(argv)
+    root = Path(args.root).resolve()
+    docs_dir = Path(args.docs)
+    if not docs_dir.is_absolute():
+        docs_dir = root / docs_dir
+    files = sorted(docs_dir.glob("*.md"))
+    if not files:
+        print(f"check_docs: no markdown files under {docs_dir}",
+              file=sys.stderr)
+        return 1
+    errors = []
+    for doc in files:
+        errors.extend(check_file(doc, docs_dir, root))
+    for e in errors:
+        print(e)
+    print(f"check_docs: {len(files)} file(s), {len(errors)} dead reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
