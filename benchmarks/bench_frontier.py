@@ -1,13 +1,19 @@
 """Dense-mask vs frontier-compacted traversal (ROADMAP item 1 payoff).
 
-The workload frontier compaction targets: a uniform-degree circulant graph
-whose BFS frontier never exceeds `degree` vertices (≈0.2-0.8% of V), so the
-dense every-edge scan wastes ≥99% of its gather bandwidth every superstep.
-SSSP runs with weights in {1, 2} — enough label correcting to be
-non-degenerate while the frontier stays a few percent of V.
+Two scenarios:
 
-Emits end-to-end runtimes for both strategies plus the speedup; the
-compacted path is expected ≥2× faster (observed ~6-8× on CPU XLA).
+* **circulant** — the uniform-degree sparse-frontier case: a BFS frontier
+  never exceeds `degree` vertices (≈0.2-0.8% of V), so the dense
+  every-edge scan wastes ≥99% of its gather bandwidth every superstep;
+  end-to-end dense vs compacted runtimes (~6-8× observed on CPU XLA).
+* **power-law (Barabási–Albert)** — the skew case degree BUCKETING
+  exists for: hubs inflate the single flat tile's `max_deg` until the
+  padded gather out-scans the dense path (the old `cap * max_deg >= E`
+  static fallback), while per-bucket tiles stay tight.  Times ONE
+  scatter-combine at a fixed ~1% frontier density for each strategy
+  (dense / flat single-tile / bucketed) and asserts `frontier="auto"`
+  statically selects the bucketed path; expected ≥2× bucketed vs dense
+  ns/edge.
 """
 from __future__ import annotations
 
@@ -17,8 +23,8 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core import algorithms
-from repro.core.engine import DevicePartition, GREEngine
-from repro.graph.generators import circulant_graph
+from repro.core.engine import DevicePartition, EngineState, GREEngine
+from repro.graph.generators import barabasi_albert_graph, circulant_graph
 
 
 def _frontier_stats(eng, part, state, max_steps):
@@ -65,8 +71,72 @@ def run(scale: int = 13, degree: int = 16, iters: int = 3):
     return us
 
 
+def run_powerlaw(scale: int = 13, m: int = 8, iters: int = 5,
+                 density: float = 0.01, repeats: int = 64):
+    """Dense vs flat-compact vs bucketed scatter-combine on a power-law
+    graph at a fixed ~`density` frontier.
+
+    A full BFS on a Barabási–Albert graph floods within a few supersteps,
+    so instead of end-to-end runs this times `repeats` chained
+    scatter-combines over a frozen random frontier of `density * V` slots
+    — the controlled-density regime the acceptance contract names.  The
+    output of each combine feeds the next call's scatter data, so XLA
+    cannot elide the repeats.
+    """
+    n = 1 << scale
+    g = barabasi_albert_graph(n, m=m, seed=0).dedup()
+    part = DevicePartition.from_graph(g)
+    prog = algorithms.bfs_program()
+    e_scan = g.num_edges * repeats
+
+    # auto must statically pick the bucketed plan (the old cap*max_deg >= E
+    # hub gate used to force power-law graphs dense)
+    auto_plan = GREEngine(prog, frontier="auto")._frontier_plan(part)
+    assert auto_plan is not None and auto_plan[0] == "bucketed", auto_plan
+
+    rng = np.random.default_rng(1)
+    live = rng.choice(n, size=max(8, int(n * density)), replace=False)
+    active = np.zeros(part.num_slots, dtype=bool)
+    active[live] = True
+
+    def make_fn(strategy):
+        eng = GREEngine(prog, frontier=strategy)
+        st0 = eng.init_state(part)
+
+        def many(sd):
+            def body(_, s):
+                out = eng.scatter_combine(
+                    part, EngineState(st0.vertex_data, s,
+                                      jnp.asarray(active), st0.step))
+                return jnp.where(jnp.isfinite(out), out, s)
+            return jax.lax.fori_loop(0, repeats, body, sd)
+
+        sd = st0.scatter_data.at[:n].set(
+            jnp.asarray(rng.uniform(1.0, 100.0, n), jnp.float32))
+        return jax.jit(many), sd
+
+    us = {}
+    for strategy in ("dense", "flat", "compact"):
+        fn, sd = make_fn(strategy)
+        us[strategy] = time_fn(fn, sd, warmup=1, iters=iters)
+    frac = live.shape[0] / n
+    common = (f"V={n};E={g.num_edges};repeats={repeats};"
+              f"frontier={frac:.4f};max_deg={part.csr_max_deg};"
+              f"buckets={'/'.join(map(str, part.bucket_sizes))}")
+    emit(f"powerlaw_scatter_dense_ba{scale}", us["dense"], common,
+         edges=e_scan)
+    emit(f"powerlaw_scatter_flat_ba{scale}", us["flat"],
+         f"{common};speedup_vs_dense={us['dense'] / us['flat']:.2f}",
+         edges=e_scan)
+    emit(f"powerlaw_scatter_bucketed_ba{scale}", us["compact"],
+         f"{common};speedup_vs_dense={us['dense'] / us['compact']:.2f};"
+         f"auto_plan=bucketed", edges=e_scan)
+    return us
+
+
 def main():
     run(13)
+    run_powerlaw(13)
 
 
 if __name__ == "__main__":

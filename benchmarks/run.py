@@ -35,7 +35,8 @@ SUITES = {
 # without an entry fall back to their full run.
 SMOKE = {
     "pagerank": lambda: bench_pagerank.run(scale=8, iters=2),
-    "frontier": lambda: bench_frontier.run(scale=12, iters=2),
+    "frontier": lambda: (bench_frontier.run(scale=12, iters=2),
+                         bench_frontier.run_powerlaw(scale=11, iters=3)),
     "exchange_overlap": lambda: bench_exchange_overlap.run(scale=10, k=2,
                                                            steps=24, iters=9),
     "vector": lambda: bench_vector_combine.run(scale=8, d_feat=64, iters=2),

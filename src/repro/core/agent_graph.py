@@ -29,7 +29,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.partition import assign_owners, rebalance_owners
-from repro.graph.structures import Graph, csr_layout
+from repro.graph.structures import Graph, csr_layout, degree_buckets
 
 
 @dataclasses.dataclass
@@ -72,6 +72,14 @@ class AgentGraph:
     csr_eidx: np.ndarray       # [k, e_pad] positions in the dst-sorted cols
     csr_max_deg: int = 0       # max local out-degree over all partitions
 
+    # Degree-bucket binning per partition (graph.structures.degree_buckets,
+    # keyed by LOCAL out-degree).  sizes/max_deg are the per-bucket maxima
+    # ACROSS partitions: shard_map traces one program for every shard, so
+    # the static tile shapes must be mesh-uniform.
+    bucket_id: np.ndarray = None      # [k, num_slots] int32, -1 = deg 0
+    bucket_sizes: tuple = ()
+    bucket_max_deg: tuple = ()
+
     @property
     def num_slots(self) -> int:
         return self.cap + self.s_pad + self.c_pad + 1
@@ -87,6 +95,15 @@ def _pad_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
     return out
 
 
+def _merge_bucket_stats(acc: tuple, stats: tuple) -> tuple:
+    """Elementwise max of per-bucket stats across partitions: shard_map
+    traces ONE program for all shards, so static bucket shapes (sizes used
+    for caps, tile max degrees) must be mesh-uniform."""
+    if not acc:
+        return tuple(stats)
+    return tuple(max(a, s) for a, s in zip(acc, stats))
+
+
 @dataclasses.dataclass
 class EdgeTile:
     """One destination-class edge tile, stacked [k, width] (host-side)."""
@@ -98,6 +115,12 @@ class EdgeTile:
     csr_indptr: np.ndarray         # [k, num_slots + 1]
     csr_eidx: np.ndarray           # [k, width]
     csr_max_deg: int
+    # Per-tile degree buckets: a slot's TILE-LOCAL out-degree (its edges
+    # that landed in this destination class) drives the binning, so the
+    # bucketed frontier gather stays tight on each tile independently.
+    bucket_id: np.ndarray = None   # [k, num_slots] int32
+    bucket_sizes: tuple = ()       # per-bucket max across partitions
+    bucket_max_deg: tuple = ()
 
 
 @dataclasses.dataclass
@@ -171,6 +194,7 @@ def split_edge_tiles(ag: AgentGraph, pad_multiple: int = 8) -> EdgeTileSplit:
             csr_indptr=np.zeros((k, num_slots + 1), dtype=np.int32),
             csr_eidx=np.zeros((k, width), dtype=np.int32),
             csr_max_deg=0,
+            bucket_id=np.full((k, num_slots), -1, dtype=np.int32),
         )
 
     remote, local = tile(er_pad, c_pad), tile(el_pad, cap)
@@ -188,6 +212,11 @@ def split_edge_tiles(ag: AgentGraph, pad_multiple: int = 8) -> EdgeTileSplit:
             t.csr_indptr[i], t.csr_eidx[i], deg = csr_layout(
                 t.src[i], t.mask[i], num_slots)
             t.csr_max_deg = max(t.csr_max_deg, deg)
+            t.bucket_id[i], sizes, max_degs = degree_buckets(
+                t.csr_indptr[i], num_slots)
+            t.bucket_sizes = _merge_bucket_stats(t.bucket_sizes, sizes)
+            t.bucket_max_deg = _merge_bucket_stats(t.bucket_max_deg,
+                                                   max_degs)
 
     return EdgeTileSplit(remote=remote, local=local,
                          remote_fraction=n_remote / max(n_real, 1))
@@ -316,10 +345,16 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
     csr_indptr = np.zeros((k, num_slots + 1), dtype=np.int32)
     csr_eidx = np.zeros((k, e_pad), dtype=np.int32)
     csr_max_deg = 0
+    bucket_id = np.full((k, num_slots), -1, dtype=np.int32)
+    bucket_sizes = bucket_max_deg = ()
     for i in range(k):
         csr_indptr[i], csr_eidx[i], deg = csr_layout(src[i], edge_mask[i],
                                                      num_slots)
         csr_max_deg = max(csr_max_deg, deg)
+        bucket_id[i], sizes, max_degs = degree_buckets(csr_indptr[i],
+                                                       num_slots)
+        bucket_sizes = _merge_bucket_stats(bucket_sizes, sizes)
+        bucket_max_deg = _merge_bucket_stats(bucket_max_deg, max_degs)
 
     return AgentGraph(
         k=k, num_vertices=V, cap=cap, s_pad=s_pad, c_pad=c_pad, e_pad=e_pad,
@@ -333,4 +368,6 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
         num_scatter=num_scatter, num_combiner=num_combiner,
         num_edges=num_edges,
         csr_indptr=csr_indptr, csr_eidx=csr_eidx, csr_max_deg=csr_max_deg,
+        bucket_id=bucket_id, bucket_sizes=bucket_sizes,
+        bucket_max_deg=bucket_max_deg,
     )

@@ -127,6 +127,9 @@ class DistGREEngine:
                 csr_indptr=jnp.asarray(ag.csr_indptr),
                 csr_eidx=jnp.asarray(ag.csr_eidx),
                 csr_max_deg=ag.csr_max_deg,
+                bucket_id=jnp.asarray(ag.bucket_id),
+                bucket_sizes=ag.bucket_sizes,
+                bucket_max_deg=ag.bucket_max_deg,
             )
             tiles = None
         return ShardTopology(
@@ -161,6 +164,9 @@ class DistGREEngine:
                 csr_indptr=jnp.asarray(t.csr_indptr),
                 csr_eidx=jnp.asarray(t.csr_eidx),
                 csr_max_deg=t.csr_max_deg,
+                bucket_id=jnp.asarray(t.bucket_id),
+                bucket_sizes=t.bucket_sizes,
+                bucket_max_deg=t.bucket_max_deg,
             )
 
         return PipelineTiles(

@@ -67,6 +67,15 @@ class DevicePartition:
     csr_eidx: Optional[jnp.ndarray] = None     # [E_pad] pos in dst-sorted cols
     csr_max_deg: int = dataclasses.field(default=0,
                                          metadata=dict(static=True))
+    # Degree-bucket binning (graph.structures.degree_buckets): slots binned
+    # by local out-degree so the compacted frontier gathers one tight
+    # [cap_b, max_deg_b] tile per bucket instead of padding everything to
+    # the hub degree.  None/empty disables bucketed compaction.
+    bucket_id: Optional[jnp.ndarray] = None    # [num_slots] int32, -1 = deg 0
+    bucket_sizes: tuple = dataclasses.field(default=(),
+                                            metadata=dict(static=True))
+    bucket_max_deg: tuple = dataclasses.field(default=(),
+                                              metadata=dict(static=True))
 
     @staticmethod
     def from_graph(graph, pad_to: Optional[int] = None,
@@ -77,8 +86,8 @@ class DevicePartition:
         backward-traversal substrate for multi-stage algorithms (paper §4.2:
         Brandes' δ accumulation runs on the transposed graph).
         """
-        from repro.graph.structures import (csr_layout, pad_edges,
-                                            sort_edges_by_dst)
+        from repro.graph.structures import (csr_layout, degree_buckets,
+                                            pad_edges, sort_edges_by_dst)
         if transpose:
             graph = graph.reversed()
         src, dst, props = graph.src, graph.dst, dict(graph.edge_props)
@@ -90,6 +99,7 @@ class DevicePartition:
         props = {k: np.pad(p, (0, e_pad - graph.num_edges)) for k, p in props.items()}
         out_deg = graph.out_degree().astype(np.float32)
         indptr, eidx, max_deg = csr_layout(psrc, mask, v + 1)
+        bucket_id, sizes, max_degs = degree_buckets(indptr, v + 1)
         return DevicePartition(
             src=jnp.asarray(psrc), dst=jnp.asarray(pdst),
             edge_mask=jnp.asarray(mask), num_masters=v, num_slots=v + 1,
@@ -99,6 +109,8 @@ class DevicePartition:
                  "global_id": jnp.arange(v, dtype=jnp.float32)},
             csr_indptr=jnp.asarray(indptr), csr_eidx=jnp.asarray(eidx),
             csr_max_deg=max_deg,
+            bucket_id=jnp.asarray(bucket_id), bucket_sizes=sizes,
+            bucket_max_deg=max_degs,
         )
 
 
@@ -119,14 +131,20 @@ class GREEngine:
     `frontier` selects the scatter strategy (core/frontier.py):
 
       "auto"    — per-superstep `lax.cond`: dense scan when the frontier is
-                  large, compacted CSR-range gather when it fits in
-                  `frontier_cap` slots (≈ the 5-10% density crossover).  The
-                  compacted path is statically skipped when its padded
-                  `[cap, max_deg]` tile would touch more edges than the
-                  dense scan (power-law hubs blow up `max_deg`).
-      "compact" — always attempt compaction (tests/microbenchmarks); the
-                  overflow guard still falls back to dense when the live
-                  frontier exceeds `frontier_cap`.
+                  large, degree-BUCKETED compacted gather when it fits (≈
+                  the 5-10% density crossover).  Each degree bucket gathers
+                  its own tight `[cap_b, max_deg_b]` tile, so power-law
+                  hubs no longer poison `max_deg` for every frontier slot;
+                  the only remaining static skip is the degenerate case
+                  where even the worst-case bucket tiles would out-scan
+                  the dense path (tiny graphs).
+      "compact" — always attempt bucketed compaction (tests/micro-
+                  benchmarks); per-bucket overflow guards still degrade an
+                  overflowing bucket to a bucket-restricted dense scan.
+      "flat"    — the PRE-bucketing compacted path: one padded
+                  `[cap, max_deg]` tile over the whole frontier, statically
+                  gated off when `cap * max_deg >= E` (kept as the
+                  benchmark ablation showing why bucketing exists).
       "dense"   — the original every-edge masked scan.
 
     Engines in `dense_frontier` mode (iterative programs like PageRank,
@@ -138,7 +156,7 @@ class GREEngine:
     reorders), not bitwise like min/max.
     """
 
-    FRONTIERS = ("auto", "dense", "compact")
+    FRONTIERS = ("auto", "dense", "compact", "flat")
 
     def __init__(self, program: VertexProgram, use_pallas: bool = False,
                  dense_frontier: Optional[bool] = None,
@@ -155,20 +173,61 @@ class GREEngine:
         self.dense_frontier = (dense_frontier if dense_frontier is not None
                                else not program.halts)
 
-    def _compaction_cap(self, part: DevicePartition) -> Optional[int]:
-        """Static (trace-time) gate: the frontier capacity to compile the
-        compacted path with, or None to stay dense for this partition."""
+    def _frontier_plan(self, part: DevicePartition):
+        """Static (trace-time) strategy resolution for one partition.
+
+        Returns None (compile the dense path only), ``("flat", cap)`` for
+        the legacy single-tile compaction, or ``("bucketed", caps)`` with
+        one capacity per degree bucket.  Buckets kill the old
+        `cap * max_deg >= E` hub gate: the bound compared against the
+        dense scan is now `sum_b cap_b * max_deg_b`, which stays small on
+        power-law graphs because the hub bucket holds few members.
+        """
         if self.frontier == "dense" or self.dense_frontier:
             return None  # iterative programs: frontier is always everything
         if part.csr_indptr is None or part.csr_max_deg <= 0:
             return None
-        from repro.core.frontier import default_cap
+        from repro.core.frontier import bucket_caps, default_cap
         cap = min(self.frontier_cap or default_cap(part.num_slots),
                   part.num_slots)
-        if (self.frontier == "auto"
-                and cap * part.csr_max_deg >= part.src.shape[0]):
-            return None  # padded tile ≥ dense scan: compaction can't win
-        return cap
+        bucketed = (self.frontier != "flat" and part.bucket_id is not None
+                    and len(part.bucket_max_deg) > 0
+                    and any(part.bucket_sizes))
+        if not bucketed:
+            if (self.frontier == "auto"
+                    and cap * part.csr_max_deg >= part.src.shape[0]):
+                return None  # padded tile ≥ dense scan: compaction can't win
+            return ("flat", cap)
+        caps = bucket_caps(part.bucket_sizes, cap)
+        worst = sum(c * d for c, d in zip(caps, part.bucket_max_deg))
+        if self.frontier == "auto" and worst >= part.src.shape[0]:
+            return None  # even full bucket tiles out-scan dense (tiny graph)
+        return ("bucketed", caps)
+
+    def calibrate_frontier_cap(self, part: DevicePartition,
+                               state: EngineState, probe_steps: int = 2,
+                               ) -> int:
+        """Derive `frontier_cap` from the LIVE frontier sizes of the first
+        superstep(s) instead of a fixed fraction of `num_slots` (which
+        over-allocates on large shards — see `frontier.default_cap`).
+
+        Runs up to `probe_steps` dense supersteps eagerly (the state is not
+        consumed; callers re-run from the same initial state) and records
+        the frontier-size histogram.  Must be called BEFORE the first
+        jitted `run` trace: the capacity is a static compile-time shape.
+        """
+        from repro.core.frontier import default_cap
+        probe = GREEngine(self.program, dense_frontier=self.dense_frontier,
+                          frontier="dense")
+        hist, s = [], state
+        for _ in range(probe_steps):
+            n = int(jnp.sum(s.active_scatter))
+            if n == 0:
+                break
+            hist.append(n)
+            s = probe.superstep(part, s)
+        self.frontier_cap = default_cap(part.num_slots, frontier_hist=hist)
+        return self.frontier_cap
 
     # ------------------------------------------------------------------ init
     def init_state(self, part: DevicePartition,
@@ -211,13 +270,14 @@ class GREEngine:
         compaction slots in without touching them.
         """
         nseg = num_segments or part.num_slots
-        cap = self._compaction_cap(part)
-        if cap is None:
+        plan = self._frontier_plan(part)
+        if plan is None:
             return self.dense_scatter_combine(part, state, nseg)
         from repro.core.frontier import frontier_scatter_combine
         return frontier_scatter_combine(
-            self.program, part, state, nseg, cap,
-            dense_fn=lambda: self.dense_scatter_combine(part, state, nseg))
+            self.program, part, state, nseg, plan,
+            dense_fn=lambda: self.dense_scatter_combine(part, state, nseg),
+            use_pallas=self.use_pallas)
 
     def dense_scatter_combine(self, part: DevicePartition, state: EngineState,
                               num_segments: Optional[int] = None

@@ -1,4 +1,4 @@
-"""Frontier-compacted scatter-combine (ROADMAP item 1).
+"""Frontier-compacted scatter-combine with degree-bucketed tiles.
 
 The dense scatter path scans EVERY edge each superstep and masks by
 `active_scatter[src]` — on a scale-free graph a BFS superstep with a 1%
@@ -9,21 +9,36 @@ that dominates vertex-centric runtimes).  This module compacts instead:
      (fixed capacity keeps the shape static for jit);
   2. CSR `indptr` (built at ingress, `graph.structures.csr_layout`) gives
      each frontier slot's out-edge range; ranges are gathered into a padded
-     `[cap, max_deg]` edge tile via the src-sorted position index
-     `csr_eidx` — destinations and edge props still read the canonical
-     (dst-sorted) columns, so callers that rewrite `dst` (the overlap
-     exchange's remote/local split) stay consistent;
+     edge tile via the src-sorted position index `csr_eidx` — destinations
+     and edge props still read the canonical (dst-sorted) columns, so
+     callers that rewrite `dst` (the overlap exchange's remote/local split)
+     stay consistent;
   3. tile messages feed the SAME `segment_combine` ⊕ as the dense path.
 
-Per-superstep strategy selection is a `lax.cond` on the live frontier
-count: dense above the density threshold, compacted below.  The predicate
-doubles as the OVERFLOW GUARD — a frontier larger than `cap` (e.g. a hub
-activating every leaf of a star in one step) falls back to the dense scan
-instead of silently dropping vertices.
+A single `[cap, max_deg]` tile (`compact_scatter_combine`, kept as the
+"flat" ablation strategy) pads every frontier slot to the partition's max
+out-degree — ONE power-law hub inflates every row, to the point where the
+padded tile out-scans the dense path and compaction had to be statically
+gated off (`cap * max_deg >= E`).  The default path is therefore
+DEGREE-BUCKETED (`bucketed_scatter_combine`): ingress bins slots by local
+out-degree (`graph.structures.degree_buckets`, bounds ≈ ⌈log2 d⌉ collapsed
+to ≤8/≤32/≤128/≤512/rest), and each bucket gathers its own
+`[cap_b, max_deg_b]` tile.  Hub buckets hold few members, so their tile degrades to a per-hub
+edge-range scan instead of poisoning `max_deg` for everyone — the static
+hub gate disappears for power-law graphs.
 
-The compacted combine always takes the XLA scatter-reduce: its `dst` tile
-is data-dependent (gathered per superstep), and the Pallas kernel needs the
-static ingress-time block table (`kernels.segment_combine`).
+Strategy selection is a `lax.cond` per superstep on the live frontier
+count: dense above the density crossover, compacted below.  OVERFLOW is
+guarded per bucket: a bucket whose live members exceed `cap_b` (a hub
+activating every leaf of a star in one step) degrades to a dense scan
+RESTRICTED to that bucket's sources — the other buckets stay compact, and
+no vertex is ever dropped.
+
+The compacted combine defaults to the XLA scatter-reduce: its `dst` tile
+is data-dependent (gathered per superstep).  With `use_pallas=True` it
+routes through the full-block-table Pallas variant
+(`kernels.segment_combine.tile_segment_combine_pallas`, interpret-mode on
+CPU) — the first step toward the ROADMAP dynamic block table.
 
 Edge tiles compose with the exchange layer's edge splits: a
 `DevicePartition` whose columns hold only a destination CLASS — the
@@ -37,7 +52,8 @@ spaces for the split tiles, full slot space otherwise).
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING
+import functools
+from typing import TYPE_CHECKING, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -52,20 +68,69 @@ if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a cycle
 # (the literature's crossover for frontier-aware traversal sits at 5-10%).
 FRONTIER_DENSITY = 1.0 / 16.0
 
+# Calibrated capacity head-room: cap = GROWTH x the largest frontier
+# observed during the probe supersteps (frontiers grow superstep over
+# superstep; the overflow guard keeps larger-than-expected ones correct).
+CAP_GROWTH = 4
 
-def default_cap(num_slots: int) -> int:
-    """Default frontier capacity: the density threshold as a slot count,
-    rounded up to a multiple of 8 (lane-friendly)."""
-    cap = max(8, int(num_slots * FRONTIER_DENSITY))
+
+def default_cap(num_slots: int,
+                frontier_hist: Optional[Sequence[int]] = None) -> int:
+    """Default frontier capacity, rounded up to a multiple of 8.
+
+    With `frontier_hist` — live frontier sizes observed on the first
+    superstep(s) (`GREEngine.calibrate_frontier_cap`) — the capacity is
+    `CAP_GROWTH x` the largest observed size: a single-source traversal on
+    a large shard starts from a handful of active slots, and sizing off the
+    LIVE density instead of `num_slots` avoids compiling (and gathering
+    into) a tile orders of magnitude wider than any real frontier.
+    Without a histogram, falls back to the density threshold as a fixed
+    fraction of `num_slots`.
+    """
+    if frontier_hist:
+        cap = max(8, CAP_GROWTH * int(max(frontier_hist)))
+    else:
+        cap = max(8, int(num_slots * FRONTIER_DENSITY))
     return min(num_slots, -(-cap // 8) * 8)
 
 
+def bucket_caps(sizes: Sequence[int], cap: int) -> tuple:
+    """Split the global frontier capacity across buckets proportionally to
+    membership.
+
+    A frontier of ≤ `cap` live slots mixed like the degree distribution
+    then fits every bucket's quota, and the worst-case tile work
+    `sum_b cap_b * max_deg_b` stays ~`cap * mean_deg` instead of
+    `cap * max_deg` per bucket (cap-sized tiles for two live hubs are how
+    a bucketed gather quietly degenerates back to the dense scan).  Each
+    nonempty bucket keeps a small floor so hubs always fit a few members;
+    quotas are lane-rounded and clamped to the bucket size.  A bucket
+    whose LIVE count exceeds its quota degrades to its restricted dense
+    scan (`bucketed_scatter_combine`) — capacity skew costs performance,
+    never correctness.
+    """
+    total = sum(sizes)
+    if total == 0:
+        return tuple(0 for _ in sizes)
+    caps = []
+    for s in sizes:
+        if s == 0:
+            caps.append(0)
+            continue
+        quota = -(-cap * s // total)            # ceil, proportional share
+        quota = -(-quota // 8) * 8              # lane-friendly
+        caps.append(min(s, max(quota, 8)))
+    return tuple(caps)
+
+
 def gather_frontier_edge_tile(part: "DevicePartition", frontier: jnp.ndarray,
-                              cap: int):
+                              cap: int, max_deg: Optional[int] = None):
     """Gather the frontier slots' out-edge ranges into a padded edge tile.
 
     `frontier` is the fixed-capacity active-slot list (`[cap]`, fill value
     `part.num_slots` — its `indptr` lookup clamps to a zero-length range).
+    `max_deg` bounds the tile width (default: the partition-wide
+    `csr_max_deg`; bucketed callers pass their bucket's own bound).
     Returns `(eid, valid)`: `eid [cap, max_deg]` are POSITIONS into the
     partition's canonical edge columns (`part.dst[eid]`,
     `part.edge_props[...][eid]`), `valid` masks the ragged lanes.  Because
@@ -75,7 +140,8 @@ def gather_frontier_edge_tile(part: "DevicePartition", frontier: jnp.ndarray,
     or the overlap exchange's in-superstep `dst` rewrite.
     """
     slots = part.num_slots
-    max_deg = part.csr_max_deg
+    if max_deg is None:
+        max_deg = part.csr_max_deg
     start = part.csr_indptr[frontier]                    # clamped gather
     end = part.csr_indptr[jnp.minimum(frontier + 1, slots)]
     deg = end - start                                    # [cap], 0 on fills
@@ -85,20 +151,44 @@ def gather_frontier_edge_tile(part: "DevicePartition", frontier: jnp.ndarray,
     return part.csr_eidx[pos], valid
 
 
+def _tile_combine(program: "VertexProgram", msgs: jnp.ndarray,
+                  dst: jnp.ndarray, num_segments: int,
+                  use_pallas: bool = False) -> jnp.ndarray:
+    """⊕-reduce a gathered tile's messages.  The tile's `dst` is
+    data-dependent, so the Pallas route uses the full-block-table variant
+    (every dst block visits every edge block) rather than the ingress-time
+    pruned table of the dense path."""
+    p = program
+    if not use_pallas:
+        return segment_combine(msgs, dst, num_segments, p.monoid,
+                               indices_are_sorted=False)
+    from repro.kernels.segment_combine import tile_segment_combine_pallas
+    payload = msgs.shape[1:]
+    flat = msgs.reshape(msgs.shape[0], -1).astype(jnp.float32)
+    out = tile_segment_combine_pallas(flat, dst.astype(jnp.int32),
+                                      num_segments, p.monoid.name)
+    return out.reshape((num_segments,) + payload).astype(p.msg_dtype)
+
+
 def compact_scatter_combine(program: "VertexProgram", part: "DevicePartition",
                             state: "EngineState", num_segments: int,
-                            cap: int) -> jnp.ndarray:
-    """⊕-combine emitted only from the ≤ `cap` active slots' out-edges.
+                            cap: int, max_deg: Optional[int] = None,
+                            frontier_mask: Optional[jnp.ndarray] = None,
+                            use_pallas: bool = False) -> jnp.ndarray:
+    """⊕-combine emitted only from the ≤ `cap` live slots' out-edges.
 
-    Bitwise-equal to the dense masked scan whenever the frontier fits in
-    `cap` (for min/max monoids exactly; sum monoids up to float reorder of
-    the segment reduction).  Callers must guard `|frontier| <= cap`.
+    `frontier_mask` restricts the frontier beyond `active_scatter` (the
+    bucketed path passes `active & (bucket_id == b)`).  Bitwise-equal to
+    the dense masked scan whenever the live mask fits in `cap` (for min/max
+    monoids exactly; sum monoids up to float reorder of the segment
+    reduction).  Callers must guard `|frontier| <= cap`.
     """
     p = program
-    max_deg = part.csr_max_deg
-    (frontier,) = jnp.nonzero(state.active_scatter, size=cap,
-                              fill_value=part.num_slots)
-    eid, valid = gather_frontier_edge_tile(part, frontier, cap)
+    if max_deg is None:
+        max_deg = part.csr_max_deg
+    mask = state.active_scatter if frontier_mask is None else frontier_mask
+    (frontier,) = jnp.nonzero(mask, size=cap, fill_value=part.num_slots)
+    eid, valid = gather_frontier_edge_tile(part, frontier, cap, max_deg)
     dst = part.dst[eid]                 # invalid lanes carry identity msgs
     gathered = jnp.take(state.scatter_data, frontier, axis=0,
                         fill_value=p.monoid.identity)    # [cap, *S]
@@ -110,23 +200,92 @@ def compact_scatter_combine(program: "VertexProgram", part: "DevicePartition",
     msgs = p.scatter_msg(flat, eprop)
     vmask = valid.reshape((-1,) + (1,) * (msgs.ndim - 1))
     msgs = jnp.where(vmask, msgs.astype(p.msg_dtype), p.monoid.identity)
-    return segment_combine(msgs, dst.reshape(-1), num_segments, p.monoid,
-                           indices_are_sorted=False)
+    return _tile_combine(program, msgs, dst.reshape(-1), num_segments,
+                         use_pallas=use_pallas)
 
 
-def frontier_scatter_combine(program: "VertexProgram", part: "DevicePartition",
-                             state: "EngineState", num_segments: int,
-                             cap: int, dense_fn) -> jnp.ndarray:
-    """Per-superstep strategy selection with the capacity/overflow guard.
+def dense_masked_combine(program: "VertexProgram", part: "DevicePartition",
+                         state: "EngineState", num_segments: int,
+                         src_mask: jnp.ndarray) -> jnp.ndarray:
+    """Dense every-edge scan with an explicit source-activity mask.
 
-    `dense_fn()` must produce the dense masked combine over the same
-    `num_segments`; it is taken whenever the frontier exceeds `cap` (density
-    crossover AND overflow protection in one predicate).
+    The per-bucket OVERFLOW path: when bucket b's live members exceed its
+    capacity, its contribution is recomputed as a dense scan restricted to
+    `active & (bucket_id == b)` — all other buckets stay compact.
     """
+    p = program
+    eprop = (part.edge_props[p.needs_edge_prop]
+             if p.needs_edge_prop else None)
+    gathered = jnp.take(state.scatter_data, part.src, axis=0,
+                        fill_value=p.monoid.identity)
+    msgs = p.scatter_msg(gathered, eprop)
+    live = jnp.take(src_mask, part.src, axis=0,
+                    fill_value=False) & part.edge_mask
+    live = live.reshape(live.shape + (1,) * (msgs.ndim - live.ndim))
+    msgs = jnp.where(live, msgs.astype(p.msg_dtype), p.monoid.identity)
+    return segment_combine(msgs, part.dst, num_segments, p.monoid,
+                           indices_are_sorted=part.edges_sorted_by_dst)
+
+
+def bucketed_scatter_combine(program: "VertexProgram",
+                             part: "DevicePartition", state: "EngineState",
+                             num_segments: int, caps: Sequence[int],
+                             use_pallas: bool = False) -> jnp.ndarray:
+    """Degree-bucketed compacted ⊕ over the live frontier.
+
+    `bucket_id` partitions slots with out-edges, so summing the per-bucket
+    partial combines touches every active out-edge exactly once.  Each
+    bucket either gathers its own `[cap_b, max_deg_b]` tile (live members
+    fit) or — per-bucket `lax.cond` — degrades to a bucket-restricted
+    dense scan (overflow).  Degree-0 slots carry `bucket_id == -1`: they
+    can never emit a message, so no bucket spends capacity on them.
+    """
+    p = program
+    partials = []
+    for b, (cap_b, max_deg_b) in enumerate(zip(caps, part.bucket_max_deg)):
+        if cap_b <= 0 or max_deg_b <= 0:
+            continue  # statically empty bucket
+        mask_b = state.active_scatter & (part.bucket_id == b)
+        n_b = jnp.sum(mask_b)
+        partials.append(jax.lax.cond(
+            n_b <= cap_b,
+            lambda m, c=cap_b, d=max_deg_b: compact_scatter_combine(
+                program, part, state, num_segments, c, max_deg=d,
+                frontier_mask=m, use_pallas=use_pallas),
+            lambda m: dense_masked_combine(program, part, state,
+                                           num_segments, m),
+            mask_b))
+    return functools.reduce(p.monoid.op, partials)
+
+
+def frontier_scatter_combine(program: "VertexProgram",
+                             part: "DevicePartition", state: "EngineState",
+                             num_segments: int, plan, dense_fn,
+                             use_pallas: bool = False) -> jnp.ndarray:
+    """Per-superstep strategy selection with capacity/overflow guards.
+
+    `plan` is the engine's static resolution (`GREEngine._frontier_plan`):
+    `("flat", cap)` or `("bucketed", caps)`.  `dense_fn()` must produce the
+    dense masked combine over the same `num_segments`; it is taken whenever
+    the live frontier exceeds the total compacted capacity (density
+    crossover AND whole-frontier overflow protection in one predicate —
+    per-bucket skew overflow is guarded inside the bucketed branch).
+    """
+    kind, caps = plan
     n_active = jnp.sum(state.active_scatter)
+    if kind == "flat":
+        return jax.lax.cond(
+            n_active <= caps,
+            lambda _: compact_scatter_combine(program, part, state,
+                                              num_segments, caps,
+                                              use_pallas=use_pallas),
+            lambda _: dense_fn(),
+            operand=None)
+    total_cap = sum(caps)
     return jax.lax.cond(
-        n_active <= cap,
-        lambda _: compact_scatter_combine(program, part, state,
-                                          num_segments, cap),
+        n_active <= total_cap,
+        lambda _: bucketed_scatter_combine(program, part, state,
+                                           num_segments, caps,
+                                           use_pallas=use_pallas),
         lambda _: dense_fn(),
         operand=None)

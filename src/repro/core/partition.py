@@ -162,6 +162,17 @@ class PartitionQuality:
     vertexcut_cut_factor: float    # 2 * (R - V) / V (paper §7.2)
     vertexcut_comm: int            # 2 * (R - V) messages per superstep
     agent_comm: int                # |Vs| + |Vc| messages per superstep (§5.1)
+    local_max_out_degree: int      # max LOCAL out-degree over partitions —
+    # the value that poisons a flat [cap, max_deg] frontier tile
+    degree_skew: float             # local max / mean local out-degree
+    # Worst-case compacted-gather work as a fraction of the partition's
+    # edge scan, at the default frontier capacity: >= 1.0 means that
+    # compaction strategy can never beat the dense path on this placement
+    # (the flat factor >= 1 is the old static dense fallback; the bucketed
+    # factor staying < 1 on skewed placements is what degree buckets buy —
+    # see repro.core.frontier).
+    flat_tile_scan_factor: float
+    bucket_tile_scan_factor: float
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -179,7 +190,7 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
     # but does not own u; combiners likewise for targets (paper §5.1 defs).
     src_key = edge_part.astype(np.int64) * V + graph.src
     dst_key = edge_part.astype(np.int64) * V + graph.dst
-    src_pairs = np.unique(src_key)
+    src_pairs, local_deg = np.unique(src_key, return_counts=True)
     dst_pairs = np.unique(dst_key)
     s_part, s_v = src_pairs // V, src_pairs % V
     c_part, c_v = dst_pairs // V, dst_pairs % V
@@ -201,6 +212,33 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
 
     ne = np.bincount(edge_part, minlength=k).astype(np.float64)
     agents = n_scatter + n_combiner
+
+    # Frontier-compaction viability of this placement: local out-degrees
+    # per (partition, source) pair — `local_deg` counts each src_pairs
+    # entry, so `s_part` is already its partition — binned like the
+    # engine's ingress.
+    from repro.core.frontier import bucket_caps, default_cap
+    from repro.graph.structures import DEFAULT_BUCKET_BOUNDS
+    deg_part = s_part
+    local_max_deg = int(local_deg.max()) if local_deg.size else 0
+    skew = (local_max_deg / local_deg.mean()) if local_deg.size else 0.0
+    cap = default_cap(int(-(-V // k)))
+    flat_factor = bucket_factor = 0.0
+    bounds = np.asarray(DEFAULT_BUCKET_BOUNDS, dtype=np.int64)
+    for i in range(k):
+        degs = local_deg[deg_part == i]
+        if degs.size == 0 or ne[i] == 0:
+            continue
+        flat_factor = max(flat_factor, cap * int(degs.max()) / ne[i])
+        b = np.searchsorted(bounds, degs, side="left")
+        sizes = tuple(int(np.sum(b == j)) for j in range(bounds.size + 1))
+        maxd = tuple(int(degs[b == j].max()) if np.any(b == j) else 0
+                     for j in range(bounds.size + 1))
+        caps = bucket_caps(sizes, cap)
+        bucket_factor = max(
+            bucket_factor,
+            sum(c * d for c, d in zip(caps, maxd)) / ne[i])
+
     return PartitionQuality(
         k=k, num_vertices=V, num_edges=E,
         num_scatters=n_scatter, num_combiners=n_combiner,
@@ -214,4 +252,8 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
         vertexcut_cut_factor=2.0 * mirrors / V,
         vertexcut_comm=2 * mirrors,
         agent_comm=agents,
+        local_max_out_degree=local_max_deg,
+        degree_skew=float(skew),
+        flat_tile_scan_factor=float(flat_factor),
+        bucket_tile_scan_factor=float(bucket_factor),
     )

@@ -65,6 +65,44 @@ def circulant_graph(n: int, degree: int = 16, weights: bool = False,
     return Graph(n, src, dst, props)
 
 
+def barabasi_albert_graph(n: int, m: int = 8, seed: int = 0,
+                          weights: bool = False) -> Graph:
+    """Preferential-attachment power-law graph (Barabási–Albert).
+
+    Each new vertex attaches `m` edges to existing vertices sampled with
+    probability proportional to their degree (the repeated-endpoints trick:
+    uniform sampling from the flat endpoint list IS degree-proportional).
+    Every edge is emitted in BOTH directions, so OUT-degrees follow the
+    p(d) ~ d^-3 power law with hubs of degree O(m·√n) — the skew regime
+    where a single padded `[cap, max_deg]` frontier tile used to collapse
+    to the static dense fallback (`cap * max_deg >= E`) while degree
+    buckets stay tight (`repro.core.frontier`).
+    """
+    rng = np.random.default_rng(seed)
+    rep = np.empty(2 * n * m, dtype=np.int64)   # flat endpoint list
+    ptr = 0
+    srcs, dsts = [], []
+    for v in range(m, n):
+        if ptr == 0:
+            tgts = np.arange(min(v, m), dtype=np.int64)
+        else:
+            tgts = np.unique(rep[rng.integers(0, ptr, size=m)])
+        k = tgts.shape[0]
+        srcs.append(np.full(k, v, dtype=np.int64))
+        dsts.append(tgts)
+        rep[ptr:ptr + k] = tgts
+        rep[ptr + k:ptr + 2 * k] = v
+        ptr += 2 * k
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    e = 2 * src.shape[0]
+    props = {}
+    if weights:
+        props["weight"] = rng.integers(1, 16, size=e).astype(np.float32)
+    return Graph(n, np.concatenate([src, dst]), np.concatenate([dst, src]),
+                 props)
+
+
 def ring_graph(n: int, weights: bool = False) -> Graph:
     src = np.arange(n, dtype=np.int64)
     dst = (src + 1) % n

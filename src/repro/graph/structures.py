@@ -138,6 +138,47 @@ def csr_layout(src: np.ndarray, edge_mask: np.ndarray, num_slots: int
     return indptr, eidx, int(counts.max()) if counts.size else 0
 
 
+# Degree-bucket upper bounds (inclusive): bucket b holds slots whose local
+# out-degree d satisfies bounds[b-1] < d <= bounds[b]; one extra unbounded
+# bucket catches the hubs.  Roughly ⌈log2 d⌉ collapsed to a small fixed set
+# so every bucket's [cap_b, max_deg_b] tile shape stays static for XLA:
+# finer ladders tighten the worst-case tile bound but pay one extra
+# frontier scan + partial ⊕ per bucket — 2-octave steps won the measured
+# trade on the power-law scatter benchmark (benchmarks/bench_frontier.py).
+DEFAULT_BUCKET_BOUNDS = (8, 32, 128, 512)
+
+
+def degree_buckets(indptr: np.ndarray, num_slots: int,
+                   bounds: tuple = DEFAULT_BUCKET_BOUNDS
+                   ) -> tuple[np.ndarray, tuple, tuple]:
+    """Bin slots by local out-degree into `len(bounds) + 1` buckets.
+
+    The substrate of the degree-bucketed frontier tiles
+    (`repro.core.frontier.bucketed_scatter_combine`): a single padded
+    `[cap, max_deg]` tile lets one hub poison `max_deg` for every frontier
+    slot; binning by degree gives each bucket its own tile whose `max_deg_b`
+    is bounded by the bucket's upper bound — the hub bucket degrades to a
+    per-hub edge-range scan while the low-degree masses stay tightly packed.
+
+    Returns `(bucket_id [num_slots] int32, sizes, max_degs)`.  `bucket_id`
+    is -1 for slots with no out-edges (they can never contribute a message,
+    so they are excluded from every bucket's capacity); `sizes[b]` and
+    `max_degs[b]` are the member count and true max degree per bucket
+    (0 for empty buckets).
+    """
+    deg = np.diff(indptr[:num_slots + 1]).astype(np.int64)
+    nb = len(bounds) + 1
+    bucket = np.searchsorted(np.asarray(bounds, dtype=np.int64), deg,
+                             side="left").astype(np.int32)
+    bucket_id = np.where(deg > 0, bucket, -1).astype(np.int32)
+    sizes, max_degs = [], []
+    for b in range(nb):
+        members = deg[bucket_id == b]
+        sizes.append(int(members.shape[0]))
+        max_degs.append(int(members.max()) if members.size else 0)
+    return bucket_id, tuple(sizes), tuple(max_degs)
+
+
 def sort_edges_by_dst(src: np.ndarray, dst: np.ndarray,
                       edge_props: Optional[Dict[str, np.ndarray]] = None):
     """Sort COO edges by destination (the combine key).

@@ -89,6 +89,39 @@ def build_block_table(dst_sorted: np.ndarray, num_segments: int,
     return table
 
 
+def full_block_table(num_edges: int, num_segments: int, block_e: int,
+                     block_v: int) -> np.ndarray:
+    """Degenerate block table for DATA-DEPENDENT destinations: every dst
+    block visits every edge block.
+
+    The ingress-time `build_block_table` prunes (dst block, edge block)
+    pairs by intersecting static dst ranges — impossible for the
+    frontier-compacted tiles, whose `dst` column is gathered per superstep.
+    This table keeps the same kernel machinery (grid, prefetch indexing,
+    accumulation) while degenerating the pruning to "visit everything":
+    rows whose dst falls outside the current block contribute all-zero
+    one-hot lanes.  First step toward the ROADMAP dynamic block table,
+    which would re-prune on-device each superstep.
+    """
+    n_e = -(-num_edges // block_e)
+    n_v = -(-num_segments // block_v)
+    return np.broadcast_to(np.arange(n_e, dtype=np.int32), (n_v, n_e)).copy()
+
+
+def tile_segment_combine_pallas(msgs: jnp.ndarray, dst: jnp.ndarray,
+                                num_segments: int, op: str = "sum",
+                                block_e: int = 256, block_v: int = 256,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Segment-combine a gathered frontier tile (msgs [E, D] float32,
+    dst [E] int32, BOTH data-dependent) via the full block table.  Shapes
+    are static under jit, so the table is built at trace time."""
+    table = jnp.asarray(full_block_table(msgs.shape[0], num_segments,
+                                         block_e, block_v))
+    return segment_combine_pallas(msgs, dst, table, num_segments, op,
+                                  block_e=block_e, block_v=block_v,
+                                  interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("num_segments", "op", "block_e",
                                              "block_v", "interpret"))
 def segment_combine_pallas(msgs: jnp.ndarray, dst: jnp.ndarray,

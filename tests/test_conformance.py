@@ -1,0 +1,246 @@
+"""Cross-backend x cross-strategy conformance matrix.
+
+ONE suite asserting BITWISE-equal results across the combinatorial surface
+
+    {null, agent, dense, pipelined} exchange backends
+  x {dense, compact, auto} frontier strategies (+ the "flat" ablation)
+  x {single-source, multi-source} payloads
+
+on random power-law (R-MAT) and circulant graphs, replacing the ad-hoc
+per-pair checks that previously accreted across `test_exchange.py`,
+`test_frontier.py` and `test_pipeline_overlap.py`.  The reference is
+always the single-shard dense-strategy NullExchange run; min-monoid
+traversal programs (BFS/SSSP/CC) must match it bitwise — min is exactly
+associative/commutative, so neither the exchange's two-stage ⊕ nor the
+bucketed tiles' per-bucket partial order can leak through.
+
+The in-process matrix covers the null backend (every strategy) and the
+pipelined backend on a 1-device mesh (split tiles + restructured loop,
+degenerate flush).  The real multi-shard matrix needs the 8-device
+XLA_FLAGS set before jax initializes, so it runs in a subprocess and is
+marked `slow`.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import algorithms
+from repro.core.agent_graph import build_agent_graph
+from repro.core.dist_engine import DistGREEngine
+from repro.core.engine import DevicePartition, GREEngine
+from repro.core.partition import greedy_partition
+from repro.graph.generators import circulant_graph, rmat_edges
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+STRATEGIES = ("dense", "compact", "auto", "flat")
+MULTI_SOURCES = [0, 3, 17]
+
+
+def _graph(kind: str, scale: int, edge_factor: int, seed: int):
+    if kind == "circulant":
+        return circulant_graph(1 << scale, degree=edge_factor, weights=True,
+                               seed=seed)
+    return rmat_edges(scale=scale, edge_factor=edge_factor, seed=seed,
+                      weights=True).dedup()
+
+
+def _single_shard(program, part, source=None, frontier="dense", cap=None,
+                  max_steps=300):
+    eng = GREEngine(program, frontier=frontier, frontier_cap=cap)
+    out = eng.run(part, eng.init_state(part, source=source), max_steps)
+    return np.asarray(out.vertex_data)
+
+
+def _pipelined(program, g, source=None, max_steps=300, **kw):
+    ag = build_agent_graph(g, greedy_partition(g, 1, batch_size=64), 1)
+    mesh = jax.make_mesh((1,), ("graph",))
+    eng = DistGREEngine(program, mesh, ("graph",), exchange="pipelined", **kw)
+    out, _ = eng.run(ag, source=source, max_steps=max_steps)
+    return out
+
+
+def _fix(x):
+    return np.nan_to_num(x, posinf=-1.0)
+
+
+# ------------------------------------------------ in-process strategy matrix
+def _check_null_matrix(kind, scale, edge_factor, seed, source, strategy,
+                       cap):
+    """Single shard: `strategy` == dense, bitwise, for single-source BFS
+    and multi-source SSSP (caps small enough to force mid-run overflow
+    fallbacks ride the per-bucket guards)."""
+    g = _graph(kind, scale, edge_factor, seed)
+    part = DevicePartition.from_graph(g)
+    bfs_ref = _single_shard(algorithms.bfs_program(), part, source=source)
+    got = _single_shard(algorithms.bfs_program(), part, source=source,
+                        frontier=strategy, cap=cap)
+    np.testing.assert_array_equal(got, bfs_ref)
+    ms = algorithms.sssp_program(num_sources=len(MULTI_SOURCES))
+    ms_ref = _single_shard(ms, part, source=MULTI_SOURCES)
+    got = _single_shard(ms, part, source=MULTI_SOURCES,
+                        frontier=strategy, cap=cap)
+    np.testing.assert_array_equal(got, ms_ref)
+
+
+def _check_pipelined_k1(kind, scale, edge_factor, seed, source, strategy):
+    """Pipelined backend (split tiles + deferred merge) on a 1-device
+    mesh: `strategy` == the single-shard dense reference, bitwise, for
+    BFS and SSSP."""
+    g = _graph(kind, scale, edge_factor, seed)
+    part = DevicePartition.from_graph(g)
+    for prog in (algorithms.bfs_program(), algorithms.sssp_program()):
+        ref = _single_shard(prog, part, source=source)
+        got = _pipelined(prog, g, source=source, frontier=strategy,
+                         frontier_cap=64)
+        np.testing.assert_array_equal(_fix(got), _fix(ref))
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("kind", ["rmat", "circulant"])
+def test_null_backend_strategy_matrix(kind, strategy):
+    _check_null_matrix(kind, 7, 8, 5, 0, strategy, cap=32)
+
+
+@pytest.mark.parametrize("strategy", ("dense", "compact", "auto"))
+def test_pipelined_k1_strategy_matrix(strategy):
+    _check_pipelined_k1("rmat", 7, 8, 5, 0, strategy)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(kind=st.sampled_from(["rmat", "circulant"]),
+           scale=st.integers(5, 7), edge_factor=st.integers(2, 8),
+           seed=st.integers(0, 999), source=st.integers(0, 31),
+           strategy=st.sampled_from(STRATEGIES),
+           cap=st.sampled_from([None, 8, 64]))
+    def test_null_backend_strategy_matrix_random(kind, scale, edge_factor,
+                                                 seed, source, strategy,
+                                                 cap):
+        _check_null_matrix(kind, scale, edge_factor, seed, source, strategy,
+                           cap)
+
+    @settings(max_examples=8, deadline=None)
+    @given(kind=st.sampled_from(["rmat", "circulant"]),
+           scale=st.integers(5, 7), edge_factor=st.integers(2, 8),
+           seed=st.integers(0, 999), source=st.integers(0, 31),
+           strategy=st.sampled_from(("dense", "compact", "auto")))
+    def test_pipelined_k1_strategy_matrix_random(kind, scale, edge_factor,
+                                                 seed, source, strategy):
+        _check_pipelined_k1(kind, scale, edge_factor, seed, source, strategy)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_cc_strategy_matrix(strategy):
+    """CC (min monoid, every vertex initially active — the all-buckets-live
+    stress for the bucketed gather): strategies agree bitwise."""
+    g = rmat_edges(scale=6, edge_factor=4, seed=5).dedup().as_undirected()
+    part = DevicePartition.from_graph(g)
+    ref = _single_shard(algorithms.cc_program(), part)
+    got = _single_shard(algorithms.cc_program(), part, frontier=strategy,
+                        cap=16)
+    np.testing.assert_array_equal(got, ref)
+
+
+# ------------------------------------------- multi-shard matrix (subprocess)
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "__SRC__")
+import numpy as np
+import jax
+
+from repro.graph.generators import circulant_graph, rmat_edges
+from repro.core.engine import GREEngine, DevicePartition
+from repro.core.partition import hash_partition
+from repro.core.agent_graph import build_agent_graph
+from repro.core.dist_engine import DistGREEngine
+from repro.core import algorithms
+
+k = 8
+mesh = jax.make_mesh((8,), ("graph",))
+fix = lambda x: np.nan_to_num(x, posinf=-1.0)
+failures = []
+
+BACKENDS = ("agent", "dense", "pipelined")
+STRATEGIES = ("dense", "compact", "auto")
+MULTI = [0, 7, 33, 101]
+
+def reference(program, part, source=None, max_steps=300):
+    eng = GREEngine(program, frontier="dense")
+    st = eng.run(part, eng.init_state(part, source=source), max_steps)
+    return np.asarray(st.vertex_data)
+
+def dist(program, ag, backend, strategy, source=None, max_steps=300, **kw):
+    eng = DistGREEngine(program, mesh, ("graph",), exchange=backend,
+                        frontier=strategy, frontier_cap=64, **kw)
+    out, _ = eng.run(ag, source=source, max_steps=max_steps)
+    return out
+
+# Full matrix on the power-law graph: {agent, dense, pipelined}
+# x {dense, compact, auto} x {single-source SSSP, multi-source BFS},
+# all bitwise vs the single-shard dense reference.
+g = rmat_edges(scale=7, edge_factor=8, seed=5, weights=True).dedup()
+ag = build_agent_graph(g, hash_partition(g, k), k)
+sp = DevicePartition.from_graph(g)
+ss_ref = reference(algorithms.sssp_program(), sp, source=0)
+ms_prog = algorithms.bfs_program(num_sources=len(MULTI))
+ms_ref = np.stack([reference(algorithms.bfs_program(), sp, source=s,
+                             max_steps=100) for s in MULTI], axis=1)
+for backend in BACKENDS:
+    for strategy in STRATEGIES:
+        got = dist(algorithms.sssp_program(), ag, backend, strategy,
+                   source=0)
+        if not np.array_equal(fix(got), fix(ss_ref)):
+            failures.append(f"rmat sssp {backend}/{strategy}")
+        got = dist(ms_prog, ag, backend, strategy, source=MULTI,
+                   max_steps=100)
+        if not np.array_equal(fix(got), fix(ms_ref)):
+            failures.append(f"rmat bfs-multi {backend}/{strategy}")
+
+# AgentExchange(overlap=True) rewrites part.dst per superstep — the one
+# backend variant outside the main matrix whose interaction with the
+# compacted gather (csr_eidx position indirection) needs its own row.
+got = dist(algorithms.sssp_program(), ag, "agent", "compact", source=0,
+           overlap=True)
+if not np.array_equal(fix(got), fix(ss_ref)):
+    failures.append("rmat sssp agent-overlap/compact")
+
+# Circulant sub-matrix: the uniform-degree regime (single bucket live).
+gc = circulant_graph(1 << 11, degree=8, weights=True, seed=1)
+agc = build_agent_graph(gc, hash_partition(gc, k), k)
+spc = DevicePartition.from_graph(gc)
+cref = reference(algorithms.sssp_program(), spc, source=3, max_steps=600)
+for backend in BACKENDS:
+    got = dist(algorithms.sssp_program(), agc, backend, "auto", source=3,
+               max_steps=600)
+    if not np.array_equal(fix(got), fix(cref)):
+        failures.append(f"circulant sssp {backend}/auto")
+
+assert not failures, failures
+print("CONFORMANCE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_conformance_matrix_8_devices(tmp_path):
+    script = tmp_path / "conformance_check.py"
+    script.write_text(SCRIPT.replace("__SRC__", SRC))
+    proc = subprocess.run([sys.executable, str(script)], capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "CONFORMANCE_OK" in proc.stdout

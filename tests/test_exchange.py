@@ -86,18 +86,8 @@ for mode, overlap in BACKENDS:
                           np.nan_to_num(ms_ref, posinf=-1.0)):
         failures.append(f"bfs multi-source {mode} overlap={overlap}")
 
-# Compacted-frontier scatter under AgentExchange: the per-shard strategy
-# cond must not perturb results (min monoid -> bitwise).  overlap=True is
-# the path that rewrites part.dst via dataclasses.replace — it relies on
-# csr_eidx being a POSITION index into the rewritten columns.
-for overlap in (False, True):
-    eng = DistGREEngine(algorithms.sssp_program(), mesh, ("graph",),
-                        exchange="agent", overlap=overlap,
-                        frontier="compact", frontier_cap=64)
-    dist_c, _ = eng.run(ag, source=0, max_steps=300)
-    if not np.array_equal(np.nan_to_num(dist_c, posinf=-1.0),
-                          np.nan_to_num(ss_ref, posinf=-1.0)):
-        failures.append(f"sssp agent compact-frontier overlap={overlap}")
+# Compacted-frontier x backend equivalence lives in the systematic matrix
+# of tests/test_conformance.py (incl. the overlap=True dst-rewrite row).
 
 # CC (min monoid, undirected): bitwise-identical across every backend.
 gu = g.as_undirected().dedup()

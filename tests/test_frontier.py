@@ -1,10 +1,13 @@
-"""Frontier-compacted scatter vs the dense masked scan, and multi-source
-payload batching vs independent single-source runs.
+"""Degree-bucketed frontier compaction: tile coverage, overflow semantics,
+capacity calibration, and multi-source payload batching.
 
-Equivalence contract (docs/frontier.md): for min-monoid
-traversal programs the two strategies must produce BITWISE-identical
-vertex_data — min is exactly associative/commutative, so even the segment
-reduction order cannot leak through.
+Strategy-equivalence across the full {backend} x {strategy} x {sources}
+surface lives in `tests/test_conformance.py`; this module keeps the
+frontier-specific properties: the bucketed gather PARTITIONS the edge set,
+per-bucket overflow degrades only the overflowing bucket, the calibrated
+capacity tracks the live frontier instead of `num_slots`, and the
+payload-batched multi-source/multi-stage programs agree with their
+per-source references.
 """
 import numpy as np
 import pytest
@@ -13,8 +16,16 @@ import jax.numpy as jnp
 
 from repro.core import algorithms
 from repro.core.engine import DevicePartition, EngineState, GREEngine
+from repro.core.frontier import (bucket_caps, bucketed_scatter_combine,
+                                 default_cap, gather_frontier_edge_tile)
 from repro.graph.generators import circulant_graph, rmat_edges
 from repro.graph.structures import Graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
 
 
 def _run(program, part, source=None, frontier="auto", cap=None,
@@ -24,81 +35,102 @@ def _run(program, part, source=None, frontier="auto", cap=None,
     return np.asarray(out.vertex_data)
 
 
-# ------------------------------------------------- dense == compact, exact
 def _assert_strategies_agree(program, part, source=None, cap=None):
     dense = _run(program, part, source=source, frontier="dense")
     compact = _run(program, part, source=source, frontier="compact", cap=cap)
     np.testing.assert_array_equal(dense, compact)
 
 
-def test_bfs_compact_matches_dense_power_law():
-    g = rmat_edges(scale=8, edge_factor=8, seed=3).dedup()
+def _star_graph(n: int) -> Graph:
+    """Hub 0 -> every leaf, every leaf -> hub (so leaves scatter too)."""
+    src = np.zeros(n - 1, dtype=np.int64)
+    dst = np.arange(1, n, dtype=np.int64)
+    return Graph(n, np.concatenate([src, dst]), np.concatenate([dst, src]))
+
+
+# ----------------------------------------------- bucketed tile edge coverage
+def _assert_buckets_partition_edges(g):
     part = DevicePartition.from_graph(g)
-    _assert_strategies_agree(algorithms.bfs_program(), part, source=0)
+    bucket_id = np.asarray(part.bucket_id)
+    deg = np.diff(np.asarray(part.csr_indptr))
+    # degree-0 slots are in NO bucket (they can never emit a message)
+    np.testing.assert_array_equal(bucket_id == -1, deg == 0)
+    seen = set()
+    for b, (size, max_deg) in enumerate(zip(part.bucket_sizes,
+                                            part.bucket_max_deg)):
+        members = np.flatnonzero(bucket_id == b)
+        assert members.shape[0] == size
+        if size == 0:
+            continue
+        eid, valid = gather_frontier_edge_tile(
+            part, jnp.asarray(members, jnp.int32), size, max_deg)
+        eids = np.asarray(eid)[np.asarray(valid)]
+        fresh = set(eids.tolist())
+        assert len(fresh) == eids.shape[0], "duplicate eid within a bucket"
+        assert not (seen & fresh), "eid claimed by two buckets"
+        seen |= fresh
+    assert seen == set(range(g.num_edges))
 
 
-def test_sssp_compact_matches_dense_power_law():
-    g = rmat_edges(scale=8, edge_factor=8, seed=4, weights=True).dedup()
-    part = DevicePartition.from_graph(g)
-    _assert_strategies_agree(algorithms.sssp_program(), part, source=0)
-
-
-def test_cc_compact_matches_dense_power_law():
-    g = rmat_edges(scale=7, edge_factor=8, seed=5).dedup().as_undirected()
-    part = DevicePartition.from_graph(g)
-    _assert_strategies_agree(algorithms.cc_program(), part)
-
-
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover - optional dependency
-    HAVE_HYPOTHESIS = False
+def test_bucketed_gather_partitions_edges_star():
+    _assert_buckets_partition_edges(_star_graph(300))
 
 
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=15, deadline=None)
-    @given(scale=st.integers(5, 7), edge_factor=st.integers(2, 8),
-           seed=st.integers(0, 999), cap=st.sampled_from([None, 8, 64]),
-           source=st.integers(0, 31))
-    def test_traversal_strategies_bitwise_equal(scale, edge_factor, seed,
-                                                cap, source):
-        """Random power-law graphs, random capacities (including caps small
-        enough to force mid-run overflow fallbacks): bitwise identical."""
-        g = rmat_edges(scale=scale, edge_factor=edge_factor, seed=seed,
-                       weights=True).dedup()
-        part = DevicePartition.from_graph(g)
-        _assert_strategies_agree(algorithms.bfs_program(), part,
-                                 source=source, cap=cap)
-        _assert_strategies_agree(algorithms.sssp_program(), part,
-                                 source=source, cap=cap)
-
-    @settings(max_examples=8, deadline=None)
-    @given(scale=st.integers(5, 7), seed=st.integers(0, 999),
-           cap=st.sampled_from([None, 16]))
-    def test_cc_strategies_bitwise_equal(scale, seed, cap):
-        g = rmat_edges(scale=scale, edge_factor=4,
-                       seed=seed).dedup().as_undirected()
-        part = DevicePartition.from_graph(g)
-        _assert_strategies_agree(algorithms.cc_program(), part, cap=cap)
+    @given(scale=st.integers(5, 8), edge_factor=st.integers(2, 8),
+           seed=st.integers(0, 999))
+    def test_bucketed_gather_partitions_edges(scale, edge_factor, seed):
+        """Per-bucket eid sets partition range(E): every real edge is
+        gathered by EXACTLY ONE bucket's tile when that bucket's full
+        membership is on the frontier."""
+        g = rmat_edges(scale=scale, edge_factor=edge_factor, seed=seed).dedup()
+        _assert_buckets_partition_edges(g)
 
 
-# --------------------------------------------------- overflow / star graph
+# --------------------------------------------------- overflow / star graphs
 def test_star_graph_overflow_falls_back_to_dense():
-    """Hub activates EVERY leaf in one superstep — the frontier (V-1
-    vertices) overflows any small capacity.  The guard must take the dense
-    path for that superstep instead of silently dropping vertices."""
+    """Hub activates EVERY leaf in one superstep — the leaf bucket's live
+    frontier (V-1 vertices) overflows any small capacity.  The per-bucket
+    guard must degrade that bucket to its restricted dense scan instead of
+    silently dropping vertices."""
     n = 257
-    src = np.zeros(n - 1, dtype=np.int64)
-    dst = np.arange(1, n, dtype=np.int64)
-    # leaves link back to the hub so the overflowing frontier also scatters
-    g = Graph(n, np.concatenate([src, dst]), np.concatenate([dst, src]))
-    part = DevicePartition.from_graph(g)
+    part = DevicePartition.from_graph(_star_graph(n))
     depth = _run(algorithms.bfs_program(), part, source=0,
                  frontier="compact", cap=8, max_steps=10)
     want = np.concatenate([[0.0], np.ones(n - 1, np.float32)])
     np.testing.assert_array_equal(depth, want)
+
+
+def test_bucket_overflow_mixed_branches():
+    """One bucket exceeds its cap while the others stay compact: the
+    overflowing bucket's partial ⊕ comes from the bucket-restricted dense
+    scan, the rest from their tiles — the total must equal the dense scan
+    bitwise (min monoid)."""
+    n = 300  # hub deg 299 -> bucket 2 (<=512); 299 leaves deg 1 -> bucket 0
+    part = DevicePartition.from_graph(_star_graph(n))
+    prog = algorithms.bfs_program()
+    caps = bucket_caps(part.bucket_sizes, 8)
+    # the scenario really exercises BOTH branches: leaves overflow, hub fits
+    bucket_id = np.asarray(part.bucket_id)
+    leaves_b = int(bucket_id[1])
+    hub_b = int(bucket_id[0])
+    assert leaves_b != hub_b
+    assert part.bucket_sizes[leaves_b] > caps[leaves_b]
+    assert part.bucket_sizes[hub_b] <= caps[hub_b]
+    # every real slot live, distinct scatter values so the ⊕ is nontrivial
+    eng = GREEngine(prog, frontier="dense")
+    st0 = eng.init_state(part)
+    state = EngineState(
+        st0.vertex_data,
+        st0.scatter_data.at[:n].set(jnp.arange(n, dtype=jnp.float32)),
+        jnp.zeros(part.num_slots, dtype=bool).at[:n].set(True),
+        st0.step)
+    dense = eng.dense_scatter_combine(part, state, part.num_slots)
+    bucketed = bucketed_scatter_combine(prog, part, state, part.num_slots,
+                                        caps)
+    np.testing.assert_array_equal(np.asarray(bucketed), np.asarray(dense))
 
 
 def test_compact_cond_branches_per_superstep():
@@ -110,19 +142,72 @@ def test_compact_cond_branches_per_superstep():
                              cap=16)
 
 
-def test_auto_skips_compaction_when_tile_exceeds_dense_scan():
-    """Static gate: a power-law hub makes cap*max_deg >= E; auto must
-    compile the dense path only (and still be correct)."""
+# --------------------------------------------------- static plan resolution
+def test_bucketed_plan_replaces_hub_gate_on_power_law():
+    """The old static `cap * max_deg >= E` gate forced power-law graphs
+    dense (one hub poisons the single tile's `max_deg`); bucketed tiles
+    bound the worst case by `sum_b cap_b * max_deg_b`, so auto now
+    compiles the compacted path on the SAME graph where the flat bound
+    still gates."""
+    from repro.graph.generators import barabasi_albert_graph
+    g = barabasi_albert_graph(4096, m=8, seed=3).dedup()
+    part = DevicePartition.from_graph(g)
+    prog = algorithms.bfs_program()
+    cap = default_cap(part.num_slots)
+    # the flat single-tile bound is pathological: hub degree x cap >= E ...
+    assert cap * part.csr_max_deg >= part.src.shape[0]
+    assert GREEngine(prog, frontier="flat")._frontier_plan(part) == \
+        ("flat", cap)  # forced flat skips the gate (overflow guard covers)
+    # ... but the bucketed bound stays well under the dense scan
+    plan = GREEngine(prog, frontier="auto")._frontier_plan(part)
+    assert plan is not None and plan[0] == "bucketed"
+    worst = sum(c * d for c, d in zip(plan[1], part.bucket_max_deg))
+    assert worst < part.src.shape[0]
+    depth = _run(prog, part, source=0, frontier="auto")
+    np.testing.assert_array_equal(depth, _run(prog, part, source=0,
+                                              frontier="dense"))
+
+
+def test_degenerate_tiny_graph_stays_dense():
+    """A directed star so small that even full bucket tiles out-scan the
+    dense path: auto must compile the dense branch only (and be correct)."""
     n = 64
     src = np.zeros(n - 1, dtype=np.int64)
     dst = np.arange(1, n, dtype=np.int64)
-    g = Graph(n, src, dst)
-    part = DevicePartition.from_graph(g)
+    part = DevicePartition.from_graph(Graph(n, src, dst))
     eng = GREEngine(algorithms.bfs_program(), frontier="auto")
-    assert eng._compaction_cap(part) is None
+    assert eng._frontier_plan(part) is None
     depth = _run(algorithms.bfs_program(), part, source=0, frontier="auto")
     want = np.concatenate([[0.0], np.ones(n - 1, np.float32)])
     np.testing.assert_array_equal(depth, want)
+
+
+# ----------------------------------------------------- capacity calibration
+def test_calibrated_cap_tracks_live_frontier():
+    """`default_cap` from the live first-superstep histogram: BFS from a
+    LEAF of a large star sees frontiers of size 1, so the calibrated cap
+    must be far below the fixed `num_slots/16` fraction (which
+    over-allocates on large shards) — and the run stays exact even when
+    the hub later floods every leaf past the calibrated cap."""
+    n = 4097
+    part = DevicePartition.from_graph(_star_graph(n))
+    prog = algorithms.bfs_program()
+    eng = GREEngine(prog, frontier="compact")
+    state = eng.init_state(part, source=1)     # a leaf
+    cap = eng.calibrate_frontier_cap(part, state)
+    assert cap == eng.frontier_cap
+    assert cap <= 16, cap                      # 4x the observed size-1 front
+    assert cap < default_cap(part.num_slots)   # fixed fraction: 256
+    out = eng.run(part, state, 10)
+    want = np.full(n, 2.0, np.float32)
+    want[1], want[0] = 0.0, 1.0
+    np.testing.assert_array_equal(np.asarray(out.vertex_data), want)
+
+
+def test_default_cap_histogram_and_fallback():
+    assert default_cap(4096) == 256            # fixed-fraction fallback
+    assert default_cap(4096, frontier_hist=[1, 3]) == 16   # 4*3 -> round 8
+    assert default_cap(64, frontier_hist=[200]) == 64      # clamped to slots
 
 
 # ------------------------------------------------------------ multi-source
@@ -183,7 +268,7 @@ def test_bc_stages_compact_matches_dense_to_float_tolerance():
         fwd = GREEngine(bc_forward_program(D), frontier=strategy)
         bwd = GREEngine(bc_backward_program(D), dense_frontier=False,
                         frontier=strategy)
-        assert (fwd._compaction_cap(fwd_part) is not None) == \
+        assert (fwd._frontier_plan(fwd_part) is not None) == \
             (strategy == "compact")
         st = fwd.init_state(fwd_part)
         st = EngineState(
@@ -222,3 +307,17 @@ def test_bc_batched_lanes_match_per_source_pipeline():
     # batch smaller than |V| forces multiple payload batches + ragged tail
     got = betweenness_centrality(g, batch=24)
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- pallas tile combine
+def test_bucketed_pallas_tile_combine_matches_xla():
+    """use_pallas routes the bucketed tiles through the full-block-table
+    kernel (interpret mode on CPU): bitwise vs the dense reference for the
+    min monoid."""
+    g = rmat_edges(scale=6, edge_factor=8, seed=11, weights=True).dedup()
+    part = DevicePartition.from_graph(g)
+    dense = _run(algorithms.sssp_program(), part, source=0, frontier="dense")
+    eng = GREEngine(algorithms.sssp_program(), frontier="compact",
+                    use_pallas=True)
+    out = eng.run(part, eng.init_state(part, source=0), 300)
+    np.testing.assert_array_equal(np.asarray(out.vertex_data), dense)

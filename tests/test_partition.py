@@ -91,3 +91,18 @@ def test_owner_assignment_covers_all(graph):
     owner = assign_owners(graph, part, 4)
     assert owner.shape == (graph.num_vertices,)
     assert owner.min() >= 0 and owner.max() < 4
+
+
+def test_tile_scan_factors_show_bucketing_viability():
+    """On a power-law placement the flat [cap, max_deg] tile's worst-case
+    gather out-scans the edge shard (the old static dense fallback) while
+    the degree-bucketed bound stays under it — the partition-quality view
+    of why repro.core.frontier buckets by degree."""
+    from repro.graph.generators import barabasi_albert_graph
+    g = barabasi_albert_graph(4096, m=8, seed=3).dedup()
+    q = partition_quality(g, np.zeros(g.num_edges, dtype=np.int64), k=1)
+    assert q.local_max_out_degree >= 256          # hubs exist
+    assert q.degree_skew > 5.0
+    assert q.flat_tile_scan_factor >= 1.0         # flat can never win
+    assert q.bucket_tile_scan_factor < 1.0        # bucketed still engages
+    assert q.bucket_tile_scan_factor < q.flat_tile_scan_factor

@@ -13,7 +13,8 @@ The in-process tests run the full pipelined machinery — `split_edge_tiles`,
 a 1-device mesh (remote tile empty, flush collective degenerate).  The
 multi-shard case needs the 8-device XLA_FLAGS set before jax initializes,
 so it runs in a subprocess (slow suite), exercising real cross-shard
-flushes, the compact-frontier path, and multi-source vector payloads.
+flushes and multi-source vector payloads; pipelined x frontier-strategy
+rows live in the `tests/test_conformance.py` matrix.
 """
 import subprocess
 import sys
@@ -128,41 +129,9 @@ def test_bfs_multi_source_pipelined_bitwise():
     np.testing.assert_array_equal(_fix(got), _fix(ref))
 
 
-def test_sssp_pipelined_compact_frontier_bitwise():
-    """The frontier-compacted scatter through the split tiles: the CSR
-    position indices are per-tile, the ⊕ segment space is the compact one."""
-    g = rmat_edges(scale=7, edge_factor=8, seed=8, weights=True).dedup()
-    ref = _single_shard(algorithms.sssp_program(), g, source=0)
-    got = _pipelined(algorithms.sssp_program(), g, source=0,
-                     frontier="compact", frontier_cap=32)
-    np.testing.assert_array_equal(_fix(got), _fix(ref))
-
-
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover - optional dependency
-    HAVE_HYPOTHESIS = False
-
-
-if HAVE_HYPOTHESIS:
-
-    @settings(max_examples=10, deadline=None)
-    @given(scale=st.integers(5, 7), edge_factor=st.integers(2, 8),
-           seed=st.integers(0, 999), source=st.integers(0, 31),
-           frontier=st.sampled_from(["dense", "compact"]))
-    def test_traversal_pipelined_bitwise_equal(scale, edge_factor, seed,
-                                               source, frontier):
-        """Random power-law graphs: pipelined == single-shard, bitwise,
-        through both frontier strategies (compact caps small enough to
-        force mid-run overflow fallbacks ride the usual guard)."""
-        g = rmat_edges(scale=scale, edge_factor=edge_factor, seed=seed,
-                       weights=True).dedup()
-        for prog in (algorithms.bfs_program(), algorithms.sssp_program()):
-            ref = _single_shard(prog, g, source=source)
-            got = _pipelined(prog, g, source=source, frontier=frontier,
-                             frontier_cap=64)
-            np.testing.assert_array_equal(_fix(got), _fix(ref))
+# Pipelined x frontier-strategy equivalence (incl. the compacted gather on
+# the split tiles and random power-law sweeps) lives in the systematic
+# matrix of tests/test_conformance.py.
 
 
 # ------------------------------------------------- multi-shard (subprocess)
@@ -210,11 +179,7 @@ if not np.array_equal(fix(pipe), fix(sync)):
 if not np.array_equal(fix(pipe), fix(ref)):
     failures.append("sssp pipelined != single-shard")
 
-# SSSP through the compact frontier on the split tiles.
-_, pipe_c = sync_vs_pipelined(algorithms.sssp_program(), ag, source=0,
-                              frontier="compact", frontier_cap=64)
-if not np.array_equal(fix(pipe_c), fix(ref)):
-    failures.append("sssp pipelined compact != single-shard")
+# (compact-frontier x pipelined rows live in test_conformance.py's matrix)
 
 # PageRank: bitwise vs sync agent (tiles preserve per-segment float-add
 # order), tolerance vs single shard (two-stage vs one-stage ⊕).
