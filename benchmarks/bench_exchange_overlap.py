@@ -10,10 +10,10 @@ full payload every superstep):
                rewrites `dst` to issue the flush early, at the cost of
                scanning the SAME edge array twice (2·E work);
   pipelined  — PipelinedAgentExchange over the static ingress edge split
-               (`agent_graph.split_edge_tiles`) through the restructured
-               `GREEngine.run_pipelined` loop: E edge-scans, compact ⊕
-               segment spaces, flush merged at the top of the next
-               superstep.
+               (`agent_graph.split_edge_tiles`) through the plan
+               executor's deferred-merge loop (`repro.core.plan`):
+               E edge-scans, compact ⊕ segment spaces, flush merged at
+               the top of the next superstep.
 
 The graph is hash-partitioned so a large fraction of edges terminate at
 combiner agents (reported as `remote_frac`) — the regime the paper's §6.2

@@ -14,6 +14,15 @@ Two scenarios:
   (dense / flat single-tile / bucketed) and asserts `frontier="auto"`
   statically selects the bucketed path; expected ≥2× bucketed vs dense
   ns/edge.
+* **power-law Pallas tile combine** (`run_powerlaw_pallas`) — the
+  dynamic block table's payoff: the same bucketed scatter with
+  `use_pallas=True`, on-device `dynamic_block_table` pruning vs the
+  degenerate full-table fallback (interpret mode on CPU, so runtimes are
+  visit-count-driven and the scenario stays small).  Emits the measured
+  `block_table_occupancy` — the visited fraction of (dst block, edge
+  block) pairs — which the acceptance contract bounds at ≤ 0.25 for ~1%
+  frontier density, and asserts the dynamic path is no slower than the
+  full table.
 """
 from __future__ import annotations
 
@@ -71,6 +80,23 @@ def run(scale: int = 13, degree: int = 16, iters: int = 3):
     return us
 
 
+def _powerlaw_setup(scale: int, m: int, density: float):
+    """Shared BA-graph scenario: partition + frozen ~`density` frontier."""
+    n = 1 << scale
+    g = barabasi_albert_graph(n, m=m, seed=0).dedup()
+    part = DevicePartition.from_graph(g)
+    prog = algorithms.bfs_program()
+    # auto must statically pick the bucketed plan (the old cap*max_deg >= E
+    # hub gate used to force power-law graphs dense)
+    auto_plan = GREEngine(prog, frontier="auto")._frontier_plan(part)
+    assert auto_plan is not None and auto_plan[0] == "bucketed", auto_plan
+    rng = np.random.default_rng(1)
+    live = rng.choice(n, size=max(8, int(n * density)), replace=False)
+    active = np.zeros(part.num_slots, dtype=bool)
+    active[live] = True
+    return g, part, prog, active, live, rng
+
+
 def run_powerlaw(scale: int = 13, m: int = 8, iters: int = 5,
                  density: float = 0.01, repeats: int = 64):
     """Dense vs flat-compact vs bucketed scatter-combine on a power-law
@@ -84,20 +110,8 @@ def run_powerlaw(scale: int = 13, m: int = 8, iters: int = 5,
     cannot elide the repeats.
     """
     n = 1 << scale
-    g = barabasi_albert_graph(n, m=m, seed=0).dedup()
-    part = DevicePartition.from_graph(g)
-    prog = algorithms.bfs_program()
+    g, part, prog, active, live, rng = _powerlaw_setup(scale, m, density)
     e_scan = g.num_edges * repeats
-
-    # auto must statically pick the bucketed plan (the old cap*max_deg >= E
-    # hub gate used to force power-law graphs dense)
-    auto_plan = GREEngine(prog, frontier="auto")._frontier_plan(part)
-    assert auto_plan is not None and auto_plan[0] == "bucketed", auto_plan
-
-    rng = np.random.default_rng(1)
-    live = rng.choice(n, size=max(8, int(n * density)), replace=False)
-    active = np.zeros(part.num_slots, dtype=bool)
-    active[live] = True
 
     def make_fn(strategy):
         eng = GREEngine(prog, frontier=strategy)
@@ -134,9 +148,62 @@ def run_powerlaw(scale: int = 13, m: int = 8, iters: int = 5,
     return us
 
 
+def run_powerlaw_pallas(scale: int = 11, m: int = 8, iters: int = 3,
+                        density: float = 0.01):
+    """Pallas bucketed tile combine: on-device dynamic block table vs the
+    degenerate full-table fallback, on the Barabási–Albert scenario.
+
+    Kernels run in interpret mode (CPU), where cost tracks the number of
+    (dst block, edge block) visits — exactly what the dynamic table
+    prunes — so the scenario stays at the smoke scale regardless of the
+    suite mode.  Emits the measured `block_table_occupancy`; the
+    acceptance contract bounds it at ≤ 0.25 for ~1% frontier density and
+    requires the dynamic path to be no slower than the full table.
+    """
+    from repro.core.frontier import bucketed_tile_occupancy
+
+    n = 1 << scale
+    g, part, prog, active, live, rng = _powerlaw_setup(scale, m, density)
+
+    def make_fn(dynamic):
+        eng = GREEngine(prog, frontier="compact", use_pallas=True,
+                        dynamic_table=dynamic)
+        st0 = eng.init_state(part)
+
+        def one(sd):
+            return eng.scatter_combine(
+                part, EngineState(st0.vertex_data, sd,
+                                  jnp.asarray(active), st0.step))
+
+        sd = st0.scatter_data.at[:n].set(
+            jnp.asarray(rng.uniform(1.0, 100.0, n), jnp.float32))
+        return jax.jit(one), sd
+
+    us = {}
+    for mode, dynamic in (("dynamic", True), ("full", False)):
+        fn, sd = make_fn(dynamic)
+        us[mode] = time_fn(fn, sd, warmup=1, iters=iters)
+
+    caps = GREEngine(prog, frontier="compact")._frontier_plan(part)[1]
+    visited, total = bucketed_tile_occupancy(part, jnp.asarray(active), caps)
+    occ = visited / max(total, 1)
+    assert occ <= 0.25, \
+        f"dynamic table visits {occ:.1%} of the full table (want <= 25%)"
+    assert us["dynamic"] <= us["full"] * 1.1, \
+        f"dynamic {us['dynamic']:.0f}us slower than full {us['full']:.0f}us"
+    frac = live.shape[0] / n
+    emit(f"powerlaw_scatter_pallas_dynamic_ba{scale}", us["dynamic"],
+         f"V={n};E={g.num_edges};frontier={frac:.4f};"
+         f"block_table_occupancy={occ:.4f};visited={visited};total={total};"
+         f"speedup_vs_full_table={us['full'] / us['dynamic']:.2f}",
+         edges=g.num_edges)
+    return us
+
+
 def main():
     run(13)
     run_powerlaw(13)
+    run_powerlaw_pallas(11)
 
 
 if __name__ == "__main__":

@@ -2,6 +2,8 @@
 # Agent-Graph distributed data model, plus the BSP engine that executes them.
 from repro.core.vertex_program import VertexProgram, Monoid, MONOIDS, segment_combine
 from repro.core.engine import GREEngine, EngineState, DevicePartition
+from repro.core.plan import (FrontierPlan, KernelPlan, SuperstepPlan,
+                             execute_plan)
 from repro.core.agent_graph import AgentGraph, build_agent_graph
 from repro.core.partition import greedy_partition, hash_partition, partition_quality
 from repro.core import algorithms

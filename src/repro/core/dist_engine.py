@@ -16,15 +16,18 @@ engine — with a pluggable ExchangeBackend supplying the communication:
       communication baseline in benchmarks and rooflines.
   exchange="pipelined" → PipelinedAgentExchange: the Agent-Graph protocol
       over a static ingress-time remote/local edge split
-      (`agent_graph.split_edge_tiles`), run through the restructured
-      `GREEngine.run_pipelined` loop — the flush collective for superstep i
-      is issued before the local-tile combine and merged at the top of
+      (`agent_graph.split_edge_tiles`) — the flush collective for superstep
+      i is issued before the local-tile combine and merged at the top of
       superstep i+1 (double-buffered `Mailbox`), overlapping communication
       with computation (paper §6.2) at E edge-scans per superstep where
       `overlap=True` needs 2·E.
 
-This module owns only backend selection, host→device topology layout, and
-state relabeling; all superstep logic lives in engine.py/exchange.py.
+Every backend runs through the SAME driver loop: the engine's
+`SuperstepPlan` (repro.core.plan) selects the exchange phase shape
+("sync" vs "pipelined") from the backend and `plan.execute_plan` drives
+it per shard.  This module owns only backend/plan selection, host→device
+topology layout, and state relabeling; all superstep logic lives in
+engine.py/exchange.py/plan.py.
 """
 from __future__ import annotations
 
@@ -41,6 +44,7 @@ from repro.core.exchange import (AgentExchange, DenseExchange, NullExchange,
                                  PipelinedAgentExchange, PipelineTiles,
                                  ShardTopology, flush_combiners,
                                  refresh_scatter_agents)
+from repro.core.plan import execute_plan
 from repro.core.vertex_program import VertexProgram
 from repro.dist.sharding import shard_map
 
@@ -58,7 +62,8 @@ class DistGREEngine:
                  axis_names: Tuple[str, ...] = ("graph",),
                  exchange: str = "agent", overlap: bool = False,
                  use_pallas: bool = False, frontier: str = "auto",
-                 frontier_cap: Optional[int] = None):
+                 frontier_cap: Optional[int] = None,
+                 dynamic_table: bool = True):
         assert exchange in self.EXCHANGES, exchange
         # NullExchange never communicates: correct only on a 1-device mesh
         # (useful to A/B the shard_map plumbing against GREEngine).
@@ -73,7 +78,20 @@ class DistGREEngine:
         # (engine.py); the lax.cond is shard-local and branch bodies have no
         # collectives, so shards may diverge dense-vs-compact per superstep.
         self.local = GREEngine(program, use_pallas=use_pallas,
-                               frontier=frontier, frontier_cap=frontier_cap)
+                               frontier=frontier, frontier_cap=frontier_cap,
+                               dynamic_table=dynamic_table)
+
+    @property
+    def plan(self):
+        """The ONE mesh-uniform plan this engine executes (introspection:
+        shard_map traces a single program, so frontier/kernel stages —
+        like every static tile shape — are identical on every shard, and
+        `phases` records the shape the selected backend's phase protocol
+        will drive).  Rebuilt from the local engine on access so a
+        `calibrate_frontier_cap` run between construction and `make_run`
+        is honored (matching `GREEngine.make_plan`)."""
+        return self.local.make_plan(
+            phases="pipelined" if self.exchange == "pipelined" else "sync")
 
     # ------------------------------------------------------ backend selection
     def make_exchange(self, topo: ShardTopology):
@@ -98,19 +116,17 @@ class DistGREEngine:
         """Stacked arrays [k, ...]; shard_map splits row i to device i.
 
         With `exchange="pipelined"` every edge scan runs on the split tiles
-        (`ShardTopology.tiles`); the canonical part then carries only the
-        statics + aux that apply needs and placeholder edge columns —
-        shipping the full columns twice would double per-device edge
-        memory for arrays the pipelined path never reads.
+        (`ShardTopology.tiles`); the canonical part then carries NO edge
+        columns at all (`DevicePartition` edge columns are optional) —
+        only the slot statics + aux that apply needs.  Shipping the full
+        columns twice would double per-device edge memory for arrays the
+        pipelined path never reads.
         """
         aux = {"out_degree": jnp.asarray(ag.out_degree),
                "global_id": jnp.asarray(
                    ag.new2old.reshape(ag.k, ag.cap).astype(np.float32))}
         if self.exchange == "pipelined":
             part = DevicePartition(
-                src=jnp.full((ag.k, 1), ag.sink, jnp.int32),
-                dst=jnp.full((ag.k, 1), ag.sink, jnp.int32),
-                edge_mask=jnp.zeros((ag.k, 1), dtype=bool),
                 num_masters=ag.cap, num_slots=ag.num_slots,
                 edges_sorted_by_dst=True, aux=aux,
             )
@@ -232,20 +248,11 @@ class DistGREEngine:
             topo_l = squeeze0(topo_stack)
             state_l = squeeze0(state_stack)
             backend = self.make_exchange(topo_l)
-
-            if hasattr(backend, "local_phase"):  # pipelined loop (engine.py)
-                out = self.local.run_pipelined(topo_l.part, state_l, backend,
-                                               max_steps=max_steps,
-                                               any_active=glob_any)
-                return unsqueeze0(out)
-
-            def cond(s):
-                return (s.step < max_steps) & glob_any(s)
-
-            def body(s):
-                return self.local.superstep(topo_l.part, s, backend)
-
-            out = jax.lax.while_loop(cond, body, state_l)
+            # the ONE driver loop (plan.execute_plan): the phase shape
+            # rides the backend, the termination predicate is the
+            # mesh-global pmax so collectives stay matched across shards
+            out = execute_plan(self.local, topo_l.part, state_l, backend,
+                               max_steps=max_steps, any_active=glob_any)
             return unsqueeze0(out)
 
         sharded = shard_map(run_shard, mesh=self.mesh,

@@ -21,11 +21,13 @@ Message payloads are first-class feature vectors: state arrays are
 The distributed engine (`repro.core.dist_engine`) runs this same superstep
 per shard with an AgentExchange or DenseExchange backend under shard_map.
 
-Backends that expose `local_phase`/`merge` (PipelinedAgentExchange) run
-through `run_pipelined` instead: the loop body is restructured into
-local-phase / flush / merge stages, with the merge of superstep i's remote
-contributions deferred to the top of superstep i+1 so the flush collective
-overlaps the local-tile combine (paper §6.2).
+HOW a run executes — which frontier strategy scans the edges, whether the
+exchange runs as one synchronous reduce or as the pipelined local-phase /
+deferred-merge shape, and which combine kernel folds the messages — is a
+`SuperstepPlan` (`repro.core.plan`), resolved once per (engine, partition)
+and driven by ONE loop, `plan.execute_plan`.  `GREEngine.run` and the
+distributed `DistGREEngine.make_run` both call that executor; there is no
+separate pipelined loop.
 """
 from __future__ import annotations
 
@@ -38,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.exchange import NULL_EXCHANGE, ExchangeBackend
+from repro.core.plan import KernelPlan, SuperstepPlan, execute_plan
 from repro.core.vertex_program import VertexProgram, segment_combine
 
 
@@ -52,12 +55,21 @@ class DevicePartition:
     static shapes).
     """
 
-    src: jnp.ndarray            # [E_pad] int32 local source slot
-    dst: jnp.ndarray            # [E_pad] int32 local destination slot
-    edge_mask: jnp.ndarray      # [E_pad] bool, False on padding
-    num_masters: int = dataclasses.field(metadata=dict(static=True))
-    num_slots: int = dataclasses.field(metadata=dict(static=True))
-    edges_sorted_by_dst: bool = dataclasses.field(metadata=dict(static=True))
+    # Edge columns are OPTIONAL: a partition that only anchors slot statics
+    # and aux for the apply phase (the canonical part under the pipelined
+    # exchange, whose edge scans all run on the split tiles) carries None
+    # instead of paying device memory for columns nothing reads.
+    src: Optional[jnp.ndarray] = None         # [E_pad] int32 local src slot
+    dst: Optional[jnp.ndarray] = None         # [E_pad] int32 local dst slot
+    edge_mask: Optional[jnp.ndarray] = None   # [E_pad] bool, False on padding
+    # The slot sizing stays REQUIRED (keyword-only, no default): omitting it
+    # must fail at construction, not as an opaque zero-shape trace error.
+    num_masters: int = dataclasses.field(kw_only=True,
+                                         metadata=dict(static=True))
+    num_slots: int = dataclasses.field(kw_only=True,
+                                       metadata=dict(static=True))
+    edges_sorted_by_dst: bool = dataclasses.field(kw_only=True,
+                                                  metadata=dict(static=True))
     edge_props: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
     aux: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
     # Src-sorted CSR secondary index (graph.structures.csr_layout) — the
@@ -160,10 +172,14 @@ class GREEngine:
 
     def __init__(self, program: VertexProgram, use_pallas: bool = False,
                  dense_frontier: Optional[bool] = None,
-                 frontier: str = "auto", frontier_cap: Optional[int] = None):
+                 frontier: str = "auto", frontier_cap: Optional[int] = None,
+                 dynamic_table: bool = True):
         assert frontier in self.FRONTIERS, frontier
         self.program = program
         self.use_pallas = use_pallas
+        # Pallas tile combine: on-device dynamic_block_table pruning pass
+        # (default) vs the degenerate full-table fallback (docs/kernels.md).
+        self.dynamic_table = dynamic_table
         self.frontier = frontier
         self.frontier_cap = frontier_cap
         # Iterative programs (halts=False, e.g. PageRank) keep every vertex
@@ -173,36 +189,25 @@ class GREEngine:
         self.dense_frontier = (dense_frontier if dense_frontier is not None
                                else not program.halts)
 
-    def _frontier_plan(self, part: DevicePartition):
-        """Static (trace-time) strategy resolution for one partition.
+    def make_plan(self, phases: str = "sync") -> SuperstepPlan:
+        """The engine's SuperstepPlan (repro.core.plan): frontier strategy
+        request + kernel stage.  `phases` RECORDS the exchange phase shape
+        so the composed mode is inspectable as one static object (the
+        executor itself drives whichever shape the backend's phase
+        protocol implements — see `plan.execute_plan`).  Rebuilt on
+        demand so `calibrate_frontier_cap`'s capacity update is honored."""
+        return SuperstepPlan(
+            strategy=self.frontier, frontier_cap=self.frontier_cap,
+            dense_frontier=self.dense_frontier, phases=phases,
+            kernel=KernelPlan(use_pallas=self.use_pallas,
+                              dynamic_table=self.dynamic_table))
 
-        Returns None (compile the dense path only), ``("flat", cap)`` for
-        the legacy single-tile compaction, or ``("bucketed", caps)`` with
-        one capacity per degree bucket.  Buckets kill the old
-        `cap * max_deg >= E` hub gate: the bound compared against the
-        dense scan is now `sum_b cap_b * max_deg_b`, which stays small on
-        power-law graphs because the hub bucket holds few members.
-        """
-        if self.frontier == "dense" or self.dense_frontier:
-            return None  # iterative programs: frontier is always everything
-        if part.csr_indptr is None or part.csr_max_deg <= 0:
-            return None
-        from repro.core.frontier import bucket_caps, default_cap
-        cap = min(self.frontier_cap or default_cap(part.num_slots),
-                  part.num_slots)
-        bucketed = (self.frontier != "flat" and part.bucket_id is not None
-                    and len(part.bucket_max_deg) > 0
-                    and any(part.bucket_sizes))
-        if not bucketed:
-            if (self.frontier == "auto"
-                    and cap * part.csr_max_deg >= part.src.shape[0]):
-                return None  # padded tile ≥ dense scan: compaction can't win
-            return ("flat", cap)
-        caps = bucket_caps(part.bucket_sizes, cap)
-        worst = sum(c * d for c, d in zip(caps, part.bucket_max_deg))
-        if self.frontier == "auto" and worst >= part.src.shape[0]:
-            return None  # even full bucket tiles out-scan dense (tiny graph)
-        return ("bucketed", caps)
+    def _frontier_plan(self, part: DevicePartition):
+        """Legacy shim over `plan.resolve_frontier`: None for the dense
+        path (compile no compacted branch), else the FrontierPlan tuple
+        (``("flat", cap)`` / ``("bucketed", caps)``)."""
+        fp = self.make_plan().frontier(part)
+        return None if fp.kind == "dense" else fp
 
     def calibrate_frontier_cap(self, part: DevicePartition,
                                state: EngineState, probe_steps: int = 2,
@@ -265,24 +270,19 @@ class GREEngine:
         ([num_segments, *payload_shape]; defaults to all local slots).
 
         Dispatches between the dense every-edge scan and the
-        frontier-compacted CSR-range gather (core/frontier.py) per the
-        engine's `frontier` strategy; exchange backends call THIS, so
-        compaction slots in without touching them.
+        frontier-compacted CSR-range gather (core/frontier.py) via the
+        plan's scatter stage (`SuperstepPlan.scatter_combine`); exchange
+        backends call THIS, so compaction slots in without touching them.
         """
-        nseg = num_segments or part.num_slots
-        plan = self._frontier_plan(part)
-        if plan is None:
-            return self.dense_scatter_combine(part, state, nseg)
-        from repro.core.frontier import frontier_scatter_combine
-        return frontier_scatter_combine(
-            self.program, part, state, nseg, plan,
-            dense_fn=lambda: self.dense_scatter_combine(part, state, nseg),
-            use_pallas=self.use_pallas)
+        return self.make_plan().scatter_combine(self, part, state,
+                                                num_segments)
 
     def dense_scatter_combine(self, part: DevicePartition, state: EngineState,
                               num_segments: Optional[int] = None
                               ) -> jnp.ndarray:
         """The dense strategy: scan every edge, mask inactive sources."""
+        assert part.src is not None, \
+            "partition carries no edge columns (tile-only topology)"
         p = self.program
         eprop = (part.edge_props[p.needs_edge_prop]
                  if p.needs_edge_prop else None)
@@ -348,76 +348,15 @@ class GREEngine:
     def run(self, part: DevicePartition, state: EngineState,
             max_steps: int = 100) -> EngineState:
         """BSP loop: terminate when no vertex is scatter-active (paper §4.1)
-        or after `max_steps` supersteps."""
+        or after `max_steps` supersteps.
 
-        def cond(s):
-            return (s.step < max_steps) & jnp.any(s.active_scatter)
-
-        def body(s):
-            return self.superstep(part, s)
-
-        return jax.lax.while_loop(cond, body, state)
-
-    # --------------------------------------------------------- pipelined run
-    def run_pipelined(self, part: DevicePartition, state: EngineState,
-                      exchange, max_steps: int = 100,
-                      any_active=None) -> EngineState:
-        """Pipelined BSP loop for backends with `local_phase`/`merge`.
-
-        The synchronous loop is refresh → combine+flush+merge → apply, with
-        the flush a barrier in the middle of every superstep.  Here the
-        superstep is cut into stages and re-seamed across iterations:
-
-          carry_i = (state_i refreshed, Mailbox(local_i, flushed_i))
-          body:    merge mailbox  → apply_i → refresh_{i+1}
-                   → remote combine + flush issue + local combine (i+1)
-
-        so the flush collective issued for superstep i+1 has the whole
-        local-tile combine between it and its consumer (the merge at the
-        top of iteration i+2) — the largest legal overlap window, since
-        `refresh_{i+1}` transitively depends on `flushed_i` through
-        `apply_i`.  ⊕-equivalence with the synchronous loop is exact: the
-        same partial combines are folded, only later.
-
-        `any_active` overrides the termination predicate (the distributed
-        engine passes the mesh-global pmax so all shards exit together and
-        the collectives inside local_phase stay matched).  The apply count
-        and final state match `run` exactly.  local_phase runs under a
-        `lax.cond` on the continuation predicate, so the run never pays
-        for edge scans or a flush collective whose mailbox would be
-        discarded (the final iteration, and the no-active-source case) —
-        the predicate is computed ONCE per iteration (post-apply, carried
-        into the loop cond) and is mesh-uniform, so every shard takes the
-        same branch and the collectives stay matched.  Evaluating it on
-        the pre-refresh state is sound: apply zeroes agent-slot activity,
-        so the global any over masters is what refresh would mirror.
+        Single-shard entry to the plan executor (`plan.execute_plan`) with
+        the NullExchange — the SAME driver loop the distributed engine
+        runs under shard_map with real backends (sync or pipelined phase
+        shapes).
         """
-        from repro.core.exchange import Mailbox
-        anyfn = any_active or (lambda s: jnp.any(s.active_scatter))
-        p = self.program
-        idm = jnp.full((part.num_masters + 1,) + tuple(p.payload_shape),
-                       p.monoid.identity, p.msg_dtype)
-
-        def keep_going(s):
-            return (s.step < max_steps) & anyfn(s)
-
-        def phase(s):
-            s = exchange.refresh(s)
-            return s, exchange.local_phase(self, s)
-
-        def phase_if(go, s, mailbox):
-            return jax.lax.cond(go, phase, lambda ss: (ss, mailbox), s)
-
-        def body(carry):
-            s, mailbox, _ = carry
-            s = self.apply(part, s, exchange.merge(mailbox))
-            go = keep_going(s)
-            return phase_if(go, s, mailbox) + (go,)
-
-        go0 = keep_going(state)
-        carry0 = phase_if(go0, state, Mailbox(local=idm, flushed=idm)) + (go0,)
-        final, _, _ = jax.lax.while_loop(lambda c: c[2], body, carry0)
-        return final
+        return execute_plan(self, part, state, NULL_EXCHANGE,
+                            max_steps=max_steps)
 
     # ------------------------------------------------- GAS baseline (ablation)
     def gas_superstep(self, part: DevicePartition, state: EngineState,

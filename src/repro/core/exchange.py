@@ -22,7 +22,8 @@ partial combines cross device boundaries.  This module isolates that seam:
                    the flush collective, then combines the local tile while
                    the collective is in flight.  The two partial combines
                    ride a two-slot `Mailbox` so the merge can be deferred to
-                   the top of the NEXT superstep (`GREEngine.run_pipelined`).
+                   the top of the NEXT superstep (the plan executor,
+                   `repro.core.plan.execute_plan`).
 
 All backends speak first-class feature-vector payloads: state and message
 arrays are `[slots, *payload_shape]`; scalars are the `payload_shape=()`
@@ -166,15 +167,53 @@ class ExchangeBackend(Protocol):
     (apply reads only master slots; Null/Agent/Dense return the full
     `[num_slots]` slot space, the pipelined backend the compact
     `[num_masters + 1]` master space).
+
+    Every backend additionally speaks the PHASE protocol the plan executor
+    drives (`repro.core.plan.execute_plan`): `local_phase` produces a
+    per-superstep carry, `merge` folds it into the combined array apply
+    consumes, and `carry_init` builds the carry's identity-valued shape
+    placeholder for the loop seed.  `phases` names the shape ("sync": the
+    carry IS the reduce output and merge is the identity; "pipelined": the
+    carry is a two-slot `Mailbox` whose flush collective overlaps the next
+    local combine).
     """
+
+    phases: str
 
     def refresh(self, state: "EngineState") -> "EngineState": ...
 
     def reduce(self, engine: "GREEngine", part: "DevicePartition",
                state: "EngineState") -> jnp.ndarray: ...
 
+    def local_phase(self, engine: "GREEngine", part: "DevicePartition",
+                    state: "EngineState"): ...
 
-class NullExchange:
+    def merge(self, carry) -> jnp.ndarray: ...
+
+    def carry_init(self, engine: "GREEngine", part: "DevicePartition"): ...
+
+
+class _SyncPhase:
+    """Default sync phase shape: the whole ⊕-reduce is the local phase and
+    the merge is the identity, so the plan executor's deferred-merge loop
+    degenerates op-for-op to the classic refresh → reduce → apply
+    superstep."""
+
+    phases = "sync"
+
+    def local_phase(self, engine, part, state):
+        return self.reduce(engine, part, state)
+
+    def merge(self, carry):
+        return carry
+
+    def carry_init(self, engine, part):
+        p = engine.program
+        return jnp.full((part.num_slots,) + tuple(p.payload_shape),
+                        p.monoid.identity, p.msg_dtype)
+
+
+class NullExchange(_SyncPhase):
     """Single shard: all destinations are local; refresh is the identity."""
 
     def refresh(self, state):
@@ -187,7 +226,7 @@ class NullExchange:
 NULL_EXCHANGE = NullExchange()
 
 
-class _RefreshingExchange:
+class _RefreshingExchange(_SyncPhase):
     """Shared base for backends that refresh scatter agents before the
     local phase (the first half of the Agent-Graph protocol)."""
 
@@ -300,8 +339,9 @@ class PipelinedAgentExchange(_RefreshingExchange):
                      is in flight; both partials return in a `Mailbox`.
       merge        — fold `Mailbox.local ⊕ Mailbox.flushed` into the master
                      contributions; deferred to the top of the next
-                     superstep by `GREEngine.run_pipelined`, which carries
-                     the mailbox through the loop.
+                     superstep by the plan executor
+                     (`repro.core.plan.execute_plan`), which carries the
+                     mailbox through the loop.
 
     Compared to `AgentExchange(overlap=True)` — which rewrites `dst` to
     split the SAME edge array twice, scanning 2·E edges per superstep —
@@ -317,6 +357,8 @@ class PipelinedAgentExchange(_RefreshingExchange):
     isolate the loop restructure from the edge split).
     """
 
+    phases = "pipelined"
+
     def __init__(self, topo: ShardTopology, axes, monoid: Monoid,
                  dense_frontier: bool = False):
         super().__init__(topo, axes, monoid, dense_frontier)
@@ -325,13 +367,16 @@ class PipelinedAgentExchange(_RefreshingExchange):
             "(agent_graph.split_edge_tiles)"
         self.tiles = topo.tiles
 
-    def local_phase(self, engine: "GREEngine", state: "EngineState") -> Mailbox:
+    def local_phase(self, engine: "GREEngine", part: "DevicePartition",
+                    state: "EngineState") -> Mailbox:
         """Remote-tile combine + flush issue, then local-tile combine.
 
         The flush is `flush_combiners` with the compact-space indices: the
         send gather reads the compact combiner ⊕ array and the receive
         folds into `[num_masters + 1]` (identity slot last) — same wire
-        traffic, ONE ⊕-reduced message per combiner agent.
+        traffic, ONE ⊕-reduced message per combiner agent.  Edge scans run
+        on the split tiles only; `part` (the canonical partition, which
+        carries no edge columns under this backend) is unused.
         """
         t = self.tiles
         masters = self.topo.part.num_masters
@@ -349,5 +394,11 @@ class PipelinedAgentExchange(_RefreshingExchange):
         """⊕ the two mailbox slots: [num_masters + 1, *payload]."""
         return self.monoid.op(mailbox.local, mailbox.flushed)
 
+    def carry_init(self, engine, part):
+        p = engine.program
+        idm = jnp.full((part.num_masters + 1,) + tuple(p.payload_shape),
+                       p.monoid.identity, p.msg_dtype)
+        return Mailbox(local=idm, flushed=idm)
+
     def reduce(self, engine, part, state):
-        return self.merge(self.local_phase(engine, state))
+        return self.merge(self.local_phase(engine, part, state))

@@ -34,11 +34,17 @@ activating every leaf of a star in one step) degrades to a dense scan
 RESTRICTED to that bucket's sources — the other buckets stay compact, and
 no vertex is ever dropped.
 
-The compacted combine defaults to the XLA scatter-reduce: its `dst` tile
-is data-dependent (gathered per superstep).  With `use_pallas=True` it
-routes through the full-block-table Pallas variant
+The compacted combine's kernel route is the plan's kernel stage
+(`repro.core.plan.KernelPlan`): the XLA scatter-reduce by default; with
+`use_pallas` the Pallas tile combine
 (`kernels.segment_combine.tile_segment_combine_pallas`, interpret-mode on
-CPU) — the first step toward the ROADMAP dynamic block table.
+CPU), which re-prunes its (dst block, edge block) prefetch table ON DEVICE
+each superstep (`dynamic_block_table` — the tile's `dst` is data-dependent,
+so the ingress-time static table cannot apply) unless the plan disables the
+pruning pass (`dynamic_table=False`, the documented full-table fallback).
+Invalid tile lanes carry the `num_segments` destination sentinel, which
+every route drops: XLA scatter-reduces drop out-of-range indices, and the
+pruning pass sorts sentinels past every real destination.
 
 Edge tiles compose with the exchange layer's edge splits: a
 `DevicePartition` whose columns hold only a destination CLASS — the
@@ -58,10 +64,12 @@ from typing import TYPE_CHECKING, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import XLA_KERNEL, KernelPlan
 from repro.core.vertex_program import segment_combine
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a cycle
     from repro.core.engine import DevicePartition, EngineState
+    from repro.core.plan import FrontierPlan
     from repro.core.vertex_program import VertexProgram
 
 # Density threshold for auto strategy selection: compact below ~6% active
@@ -153,20 +161,25 @@ def gather_frontier_edge_tile(part: "DevicePartition", frontier: jnp.ndarray,
 
 def _tile_combine(program: "VertexProgram", msgs: jnp.ndarray,
                   dst: jnp.ndarray, num_segments: int,
-                  use_pallas: bool = False) -> jnp.ndarray:
-    """⊕-reduce a gathered tile's messages.  The tile's `dst` is
-    data-dependent, so the Pallas route uses the full-block-table variant
-    (every dst block visits every edge block) rather than the ingress-time
-    pruned table of the dense path."""
+                  kernel: KernelPlan = XLA_KERNEL) -> jnp.ndarray:
+    """⊕-reduce a gathered tile's messages through the plan's kernel stage.
+
+    `dst` carries the `num_segments` sentinel on invalid lanes (both
+    routes drop them).  The tile's `dst` is data-dependent, so the Pallas
+    route re-prunes its block table ON DEVICE each superstep
+    (`dynamic_block_table`) instead of using the ingress-time static table
+    of the dense path; `kernel.dynamic_table=False` falls back to the
+    degenerate full table."""
     p = program
-    if not use_pallas:
+    if not kernel.use_pallas:
         return segment_combine(msgs, dst, num_segments, p.monoid,
                                indices_are_sorted=False)
     from repro.kernels.segment_combine import tile_segment_combine_pallas
     payload = msgs.shape[1:]
     flat = msgs.reshape(msgs.shape[0], -1).astype(jnp.float32)
     out = tile_segment_combine_pallas(flat, dst.astype(jnp.int32),
-                                      num_segments, p.monoid.name)
+                                      num_segments, p.monoid.name,
+                                      dynamic=kernel.dynamic_table)
     return out.reshape((num_segments,) + payload).astype(p.msg_dtype)
 
 
@@ -174,7 +187,7 @@ def compact_scatter_combine(program: "VertexProgram", part: "DevicePartition",
                             state: "EngineState", num_segments: int,
                             cap: int, max_deg: Optional[int] = None,
                             frontier_mask: Optional[jnp.ndarray] = None,
-                            use_pallas: bool = False) -> jnp.ndarray:
+                            kernel: KernelPlan = XLA_KERNEL) -> jnp.ndarray:
     """⊕-combine emitted only from the ≤ `cap` live slots' out-edges.
 
     `frontier_mask` restricts the frontier beyond `active_scatter` (the
@@ -189,7 +202,10 @@ def compact_scatter_combine(program: "VertexProgram", part: "DevicePartition",
     mask = state.active_scatter if frontier_mask is None else frontier_mask
     (frontier,) = jnp.nonzero(mask, size=cap, fill_value=part.num_slots)
     eid, valid = gather_frontier_edge_tile(part, frontier, cap, max_deg)
-    dst = part.dst[eid]                 # invalid lanes carry identity msgs
+    # invalid lanes carry identity msgs AND the out-of-range dst sentinel:
+    # XLA scatter-reduces drop them, and the Pallas dynamic pruning pass
+    # sorts them past every real destination so their blocks prune away
+    dst = jnp.where(valid, part.dst[eid], num_segments)
     gathered = jnp.take(state.scatter_data, frontier, axis=0,
                         fill_value=p.monoid.identity)    # [cap, *S]
     tile = jnp.broadcast_to(gathered[:, None],
@@ -201,7 +217,7 @@ def compact_scatter_combine(program: "VertexProgram", part: "DevicePartition",
     vmask = valid.reshape((-1,) + (1,) * (msgs.ndim - 1))
     msgs = jnp.where(vmask, msgs.astype(p.msg_dtype), p.monoid.identity)
     return _tile_combine(program, msgs, dst.reshape(-1), num_segments,
-                         use_pallas=use_pallas)
+                         kernel=kernel)
 
 
 def dense_masked_combine(program: "VertexProgram", part: "DevicePartition",
@@ -230,7 +246,7 @@ def dense_masked_combine(program: "VertexProgram", part: "DevicePartition",
 def bucketed_scatter_combine(program: "VertexProgram",
                              part: "DevicePartition", state: "EngineState",
                              num_segments: int, caps: Sequence[int],
-                             use_pallas: bool = False) -> jnp.ndarray:
+                             kernel: KernelPlan = XLA_KERNEL) -> jnp.ndarray:
     """Degree-bucketed compacted ⊕ over the live frontier.
 
     `bucket_id` partitions slots with out-edges, so summing the per-bucket
@@ -251,25 +267,62 @@ def bucketed_scatter_combine(program: "VertexProgram",
             n_b <= cap_b,
             lambda m, c=cap_b, d=max_deg_b: compact_scatter_combine(
                 program, part, state, num_segments, c, max_deg=d,
-                frontier_mask=m, use_pallas=use_pallas),
+                frontier_mask=m, kernel=kernel),
             lambda m: dense_masked_combine(program, part, state,
                                            num_segments, m),
             mask_b))
     return functools.reduce(p.monoid.op, partials)
 
 
+def bucketed_tile_occupancy(part: "DevicePartition", active: jnp.ndarray,
+                            caps: Sequence[int],
+                            num_segments: Optional[int] = None,
+                            block_e: int = 256, block_v: int = 256) -> tuple:
+    """Measured dynamic-block-table occupancy for a live frontier.
+
+    Replays the bucketed gather for `active` (each bucket's `[cap_b,
+    max_deg_b]` tile, invalid lanes sentineled) and builds each tile's
+    per-superstep `dynamic_block_table`, returning ``(visited, total)``
+    (dst block, edge block) pair counts summed over buckets — `total` is
+    what the degenerate full table would visit.  Diagnostic only (eager;
+    `benchmarks/bench_frontier.py` emits `visited / total` as
+    `block_table_occupancy`); the in-graph pruning pass inside the kernel
+    route computes the same tables.
+    """
+    from repro.kernels.segment_combine import dynamic_block_table
+    nseg = num_segments or part.num_slots
+    visited = total = 0
+    for b, (cap_b, max_deg_b) in enumerate(zip(caps, part.bucket_max_deg)):
+        if cap_b <= 0 or max_deg_b <= 0:
+            continue
+        mask_b = active & (part.bucket_id == b)
+        (frontier,) = jnp.nonzero(mask_b, size=cap_b,
+                                  fill_value=part.num_slots)
+        eid, valid = gather_frontier_edge_tile(part, frontier, cap_b,
+                                               max_deg_b)
+        dst = jnp.sort(jnp.where(valid, part.dst[eid], nseg).reshape(-1))
+        table = dynamic_block_table(dst, nseg, block_e, block_v)
+        n_e = table.shape[1]
+        visited += int(jnp.sum(table < n_e))
+        total += table.shape[0] * n_e
+    return visited, total
+
+
 def frontier_scatter_combine(program: "VertexProgram",
                              part: "DevicePartition", state: "EngineState",
-                             num_segments: int, plan, dense_fn,
-                             use_pallas: bool = False) -> jnp.ndarray:
+                             num_segments: int, plan: "FrontierPlan",
+                             dense_fn,
+                             kernel: KernelPlan = XLA_KERNEL) -> jnp.ndarray:
     """Per-superstep strategy selection with capacity/overflow guards.
 
-    `plan` is the engine's static resolution (`GREEngine._frontier_plan`):
-    `("flat", cap)` or `("bucketed", caps)`.  `dense_fn()` must produce the
-    dense masked combine over the same `num_segments`; it is taken whenever
-    the live frontier exceeds the total compacted capacity (density
-    crossover AND whole-frontier overflow protection in one predicate —
-    per-bucket skew overflow is guarded inside the bucketed branch).
+    `plan` is the static per-partition resolution
+    (`repro.core.plan.resolve_frontier`, kind "flat" or "bucketed" — the
+    dense kind never reaches here).  `dense_fn()` must produce the dense
+    masked combine over the same `num_segments`; it is taken whenever the
+    live frontier exceeds the total compacted capacity (density crossover
+    AND whole-frontier overflow protection in one predicate — per-bucket
+    skew overflow is guarded inside the bucketed branch).  `kernel` is the
+    plan's combine-kernel stage, threaded into the tile combines.
     """
     kind, caps = plan
     n_active = jnp.sum(state.active_scatter)
@@ -278,7 +331,7 @@ def frontier_scatter_combine(program: "VertexProgram",
             n_active <= caps,
             lambda _: compact_scatter_combine(program, part, state,
                                               num_segments, caps,
-                                              use_pallas=use_pallas),
+                                              kernel=kernel),
             lambda _: dense_fn(),
             operand=None)
     total_cap = sum(caps)
@@ -286,6 +339,6 @@ def frontier_scatter_combine(program: "VertexProgram",
         n_active <= total_cap,
         lambda _: bucketed_scatter_combine(program, part, state,
                                            num_segments, caps,
-                                           use_pallas=use_pallas),
+                                           kernel=kernel),
         lambda _: dense_fn(),
         operand=None)

@@ -173,6 +173,16 @@ class PartitionQuality:
     # see repro.core.frontier).
     flat_tile_scan_factor: float
     bucket_tile_scan_factor: float
+    # Visited fraction of the ingress-time Pallas block table over the
+    # worst partition's dst-sorted, locally-DENSIFIED dst ids
+    # (kernels.segment_combine.build_block_table over unique-rank
+    # relabeled dsts — the ingress approximation of the per-device
+    # relabeled slot space the engine's real table is built from): the
+    # share of (dst block, edge block) pairs the dense-path kernel
+    # computes; 1.0 would be the degenerate full table.  The
+    # per-superstep DYNAMIC table's occupancy at a live frontier is
+    # measured by benchmarks/bench_frontier.py.
+    block_table_occupancy: float
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -219,11 +229,13 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
     # engine's ingress.
     from repro.core.frontier import bucket_caps, default_cap
     from repro.graph.structures import DEFAULT_BUCKET_BOUNDS
+    from repro.kernels.segment_combine import (block_table_occupancy,
+                                               build_block_table)
     deg_part = s_part
     local_max_deg = int(local_deg.max()) if local_deg.size else 0
     skew = (local_max_deg / local_deg.mean()) if local_deg.size else 0.0
     cap = default_cap(int(-(-V // k)))
-    flat_factor = bucket_factor = 0.0
+    flat_factor = bucket_factor = occupancy = 0.0
     bounds = np.asarray(DEFAULT_BUCKET_BOUNDS, dtype=np.int64)
     for i in range(k):
         degs = local_deg[deg_part == i]
@@ -238,6 +250,19 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
         bucket_factor = max(
             bucket_factor,
             sum(c * d for c, d in zip(caps, maxd)) / ne[i])
+        # ingress-table sparsity skipping on this partition's dst-sorted
+        # edges.  The engine builds its table over RELABELED local slot
+        # ids (dense per device), not global ids — a locality-aware
+        # placement packs a partition's global dsts into a narrow band of
+        # [0, V) and would fake near-zero occupancy — so densify the
+        # partition's dst ids (unique-rank relabel) as the ingress
+        # approximation of its local slot space.
+        _, inv = np.unique(graph.dst[edge_part == i], return_inverse=True)
+        dst_sorted = np.sort(inv).astype(np.int32)
+        table = build_block_table(dst_sorted, int(inv.max()) + 1,
+                                  block_e=256, block_v=256)
+        n_e = -(-dst_sorted.shape[0] // 256)
+        occupancy = max(occupancy, block_table_occupancy(table, n_e))
 
     return PartitionQuality(
         k=k, num_vertices=V, num_edges=E,
@@ -256,4 +281,5 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
         degree_skew=float(skew),
         flat_tile_scan_factor=float(flat_factor),
         bucket_tile_scan_factor=float(bucket_factor),
+        block_table_occupancy=float(occupancy),
     )

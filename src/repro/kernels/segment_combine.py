@@ -13,6 +13,25 @@ one-hot matmuls on the MXU** over dst-sorted edges:
     or a masked VPU reduction (min/max ⊕) and accumulates into the VMEM
     output block.
 
+THREE block tables drive the same kernel (see docs/kernels.md):
+
+  build_block_table    — host-side ingress pruning over the STATIC dst-sorted
+                         edge columns (the dense-path table);
+  dynamic_block_table  — the same pruning computed IN-GRAPH each superstep
+                         from a data-dependent (gathered, then dst-sorted)
+                         tile: per-edge-block dst min/max via blocked
+                         reductions, then the sentinel-padded intersection
+                         table.  This is the default for the frontier-
+                         compacted tile combine;
+  full_block_table     — the degenerate every-pair fallback, kept only for
+                         `dynamic=False` (the documented escape hatch when
+                         the pruning pass is disabled).
+
+All three speak the same sentinel semantics: a table row is padded with
+`n_edge_blocks`, which indexes one appended all-identity dummy edge block;
+`@pl.when(eb < n_edge_blocks)` skips the visit entirely, so padded entries
+cost a (cache-resident) dummy block fetch and no compute.
+
 VMEM working set per step: BE·D (messages) + BE (ids) + BV·D (out block).
 Defaults BE=256, BV=256, D ≤ 512 keep this well under 16 MB VMEM and the
 matmul dims multiples of the 128-lane MXU tiles.
@@ -28,6 +47,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 _OP_IDENTITY = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+# Out-of-range destination sentinel: padded edges (and invalid tile lanes)
+# carry a dst no real segment block can intersect, so both the pruning pass
+# and the in-kernel one-hot drop them.
+_DST_SENTINEL = np.int32(2**31 - 1)
 
 
 def _kernel(table_ref, dst_ref, msgs_ref, out_ref, *, op: str, block_v: int,
@@ -72,7 +96,8 @@ def build_block_table(dst_sorted: np.ndarray, num_segments: int,
     n_e = -(-e // block_e)
     n_v = -(-num_segments // block_v)
     pad = n_e * block_e - e
-    d = np.concatenate([dst_sorted, np.full(pad, 2**31 - 1, dst_sorted.dtype)])
+    d = np.concatenate([dst_sorted, np.full(pad, _DST_SENTINEL,
+                                            dst_sorted.dtype)])
     first = d.reshape(n_e, block_e).min(axis=1)
     last = d.reshape(n_e, block_e).max(axis=1)
     # padded tail edges carry sentinel dst; clip to real values present
@@ -89,19 +114,77 @@ def build_block_table(dst_sorted: np.ndarray, num_segments: int,
     return table
 
 
+def dynamic_block_table(dst: jnp.ndarray, num_segments: int, block_e: int,
+                        block_v: int) -> jnp.ndarray:
+    """ON-DEVICE per-superstep pruning pass for DATA-DEPENDENT destinations.
+
+    `dst [E] int32` is a gathered tile's destination column, SORTED
+    ascending, with invalid lanes carrying a sentinel `>= num_segments`
+    (they sort past every real destination).  The same intersection test as
+    the ingress-time `build_block_table` runs in-graph with blocked
+    reductions:
+
+      1. reshape the (sentinel-padded) dst column to `[n_e, block_e]` and
+         reduce each edge block to its dst `[first, last]` range;
+      2. a (dst block, edge block) pair is visited iff the ranges intersect
+         (`last >= lo & first < hi`); the sentinel makes all-invalid blocks
+         intersect nothing;
+      3. each row's hits compact to the left via a sort of
+         `where(hit, block_id, n_e)` — rows stay padded with `n_e`, the
+         kernel's skip sentinel, and entries stay in ascending edge-block
+         order (the same layout the host-side table produces).
+
+    The table width is the STATIC worst case `n_e` (every edge block hits),
+    so the shape is jit-stable; pruning shows up as sentinel-padded rows the
+    kernel's `@pl.when` skips, not as a smaller grid.  Returns
+    `[n_v, n_e] int32`.
+    """
+    e = dst.shape[0]
+    n_e = -(-e // block_e)
+    n_v = -(-num_segments // block_v)
+    d = jnp.pad(dst.astype(jnp.int32), (0, n_e * block_e - e),
+                constant_values=_DST_SENTINEL).reshape(n_e, block_e)
+    real = d < num_segments
+    first = d.min(axis=1)                         # [n_e]; sentinel if empty
+    last = jnp.where(real, d, -1).max(axis=1)     # [n_e] tightest real dst
+    lo = jnp.arange(n_v, dtype=jnp.int32) * block_v         # [n_v]
+    # All-sentinel blocks are excluded by the MASKED `last` (= -1, below
+    # every `lo`), not by `first`: the tile sentinel `num_segments` can
+    # still fall inside the last dst block's padded range when
+    # num_segments is not a multiple of block_v.
+    hit = ((last[None, :] >= lo[:, None])
+           & (first[None, :] < (lo + block_v)[:, None]))    # [n_v, n_e]
+    ids = jnp.arange(n_e, dtype=jnp.int32)
+    return jnp.sort(jnp.where(hit, ids[None, :], n_e), axis=1)
+
+
+def block_table_occupancy(table, n_edge_blocks: int) -> float:
+    """Visited-block fraction of a prefetch table vs the FULL table: the
+    share of the `n_v * n_edge_blocks` (dst block, edge block) pairs the
+    kernel actually computes (table entries below the `n_edge_blocks`
+    skip sentinel).  The denominator is the full pair count, not the
+    table width — `build_block_table` rows are already narrower than
+    `n_edge_blocks`.  1.0 is the degenerate `full_block_table`; the
+    pruning diagnostics in `partition_quality` and `bench_frontier`
+    report this number."""
+    table = np.asarray(table)
+    visited = int(np.sum(table < n_edge_blocks))
+    return visited / (table.shape[0] * max(n_edge_blocks, 1))
+
+
 def full_block_table(num_edges: int, num_segments: int, block_e: int,
                      block_v: int) -> np.ndarray:
-    """Degenerate block table for DATA-DEPENDENT destinations: every dst
-    block visits every edge block.
+    """Degenerate block table: every dst block visits every edge block.
 
-    The ingress-time `build_block_table` prunes (dst block, edge block)
-    pairs by intersecting static dst ranges — impossible for the
-    frontier-compacted tiles, whose `dst` column is gathered per superstep.
-    This table keeps the same kernel machinery (grid, prefetch indexing,
-    accumulation) while degenerating the pruning to "visit everything":
-    rows whose dst falls outside the current block contribute all-zero
-    one-hot lanes.  First step toward the ROADMAP dynamic block table,
-    which would re-prune on-device each superstep.
+    DEPRECATED as a public entry point — the frontier tile combine now
+    routes through the plan's kernel stage (`repro.core.plan.KernelPlan`),
+    which builds the on-device `dynamic_block_table` by default.  This
+    table remains only as the documented fallback when the dynamic pruning
+    pass is disabled (`KernelPlan(dynamic_table=False)` /
+    `tile_segment_combine_pallas(.., dynamic=False)`): same kernel
+    machinery (grid, prefetch indexing, accumulation), no skipping — rows
+    whose dst falls outside the current block contribute all-zero one-hot
+    lanes.
     """
     n_e = -(-num_edges // block_e)
     n_v = -(-num_segments // block_v)
@@ -111,12 +194,34 @@ def full_block_table(num_edges: int, num_segments: int, block_e: int,
 def tile_segment_combine_pallas(msgs: jnp.ndarray, dst: jnp.ndarray,
                                 num_segments: int, op: str = "sum",
                                 block_e: int = 256, block_v: int = 256,
-                                interpret: bool = True) -> jnp.ndarray:
+                                interpret: bool = True,
+                                dynamic: bool = True) -> jnp.ndarray:
     """Segment-combine a gathered frontier tile (msgs [E, D] float32,
-    dst [E] int32, BOTH data-dependent) via the full block table.  Shapes
-    are static under jit, so the table is built at trace time."""
-    table = jnp.asarray(full_block_table(msgs.shape[0], num_segments,
-                                         block_e, block_v))
+    dst [E] int32, BOTH data-dependent).
+
+    With `dynamic=True` (default) the tile is dst-sorted on device and the
+    kernel runs over the per-superstep `dynamic_block_table` — restoring
+    the ingress-style sparsity skipping for tiles whose dst is gathered per
+    superstep.  Invalid lanes must carry `dst >= num_segments` so the sort
+    pushes them past every real destination and the pruning drops their
+    blocks.  `dynamic=False` falls back to the degenerate
+    `full_block_table` (every pair visited; no sort) — the escape hatch
+    when the pruning pass itself is under test or disabled.
+
+    The dst-sort re-orders messages within a segment: min/max ⊕ stay
+    bitwise-identical to the XLA scatter-reduce; sums agree to float
+    tolerance (the same reorder caveat every compacted strategy already
+    carries).
+    """
+    dst = dst.astype(jnp.int32)
+    if dynamic:
+        order = jnp.argsort(dst)
+        dst = dst[order]
+        msgs = msgs[order]
+        table = dynamic_block_table(dst, num_segments, block_e, block_v)
+    else:
+        table = jnp.asarray(full_block_table(msgs.shape[0], num_segments,
+                                             block_e, block_v))
     return segment_combine_pallas(msgs, dst, table, num_segments, op,
                                   block_e=block_e, block_v=block_v,
                                   interpret=interpret)
@@ -129,8 +234,8 @@ def segment_combine_pallas(msgs: jnp.ndarray, dst: jnp.ndarray,
                            op: str = "sum", block_e: int = 256,
                            block_v: int = 256, interpret: bool = True
                            ) -> jnp.ndarray:
-    """msgs [E, D] (dst-sorted), dst [E] int32, table from build_block_table.
-    Returns [num_segments, D]."""
+    """msgs [E, D] (dst-sorted), dst [E] int32, table from any of the
+    block-table builders above.  Returns [num_segments, D]."""
     e, d_feat = msgs.shape
     n_e = -(-e // block_e)
     n_v = -(-num_segments // block_v)
@@ -139,10 +244,11 @@ def segment_combine_pallas(msgs: jnp.ndarray, dst: jnp.ndarray,
     # pad edges with an out-of-range dst so their one-hot rows are all-zero
     msgs = jnp.pad(msgs, ((0, e_pad - e), (0, 0)))
     dst = jnp.pad(dst.astype(jnp.int32), (0, e_pad - e),
-                  constant_values=jnp.int32(2**31 - 1))
+                  constant_values=_DST_SENTINEL)
     # append one dummy zero edge block for padded table entries
     msgs = jnp.concatenate([msgs, jnp.zeros((block_e, d_feat), msgs.dtype)])
-    dst = jnp.concatenate([dst, jnp.full((block_e,), 2**31 - 1, jnp.int32)])
+    dst = jnp.concatenate([dst, jnp.full((block_e,), _DST_SENTINEL,
+                                         jnp.int32)])
 
     width = table.shape[1]
     grid = (n_v, width)

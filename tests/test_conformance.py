@@ -3,7 +3,8 @@
 ONE suite asserting BITWISE-equal results across the combinatorial surface
 
     {null, agent, dense, pipelined} exchange backends
-  x {dense, compact, auto} frontier strategies (+ the "flat" ablation)
+  x {dense, flat, compact, auto} frontier strategies
+  x {XLA, Pallas-dynamic-table, Pallas-full-table} combine kernels
   x {single-source, multi-source} payloads
 
 on random power-law (R-MAT) and circulant graphs, replacing the ad-hoc
@@ -11,14 +12,20 @@ per-pair checks that previously accreted across `test_exchange.py`,
 `test_frontier.py` and `test_pipeline_overlap.py`.  The reference is
 always the single-shard dense-strategy NullExchange run; min-monoid
 traversal programs (BFS/SSSP/CC) must match it bitwise — min is exactly
-associative/commutative, so neither the exchange's two-stage ⊕ nor the
-bucketed tiles' per-bucket partial order can leak through.
+associative/commutative, so neither the exchange's two-stage ⊕, the
+bucketed tiles' per-bucket partial order, nor the Pallas dynamic pruning
+pass's on-device dst sort can leak through.  Every combination runs
+through the ONE plan executor (`repro.core.plan.execute_plan`): there is
+no separate pipelined loop to diverge from.
 
-The in-process matrix covers the null backend (every strategy) and the
-pipelined backend on a 1-device mesh (split tiles + restructured loop,
-degenerate flush).  The real multi-shard matrix needs the 8-device
-XLA_FLAGS set before jax initializes, so it runs in a subprocess and is
-marked `slow`.
+The in-process matrix covers the null backend (every strategy and kernel,
+interpret-mode Pallas) and the pipelined backend on a 1-device mesh
+(split tiles + deferred merge, degenerate flush).  The real multi-shard
+matrix needs the 8-device XLA_FLAGS set before jax initializes, so it
+runs in a subprocess and is marked `slow`.  A kernel-level section checks
+the on-device `dynamic_block_table` pruning pass against the full table
+and the XLA oracle directly; each hypothesis test has a fixed-seed twin
+so the matrix still runs where `hypothesis` is absent.
 """
 import subprocess
 import sys
@@ -101,15 +108,59 @@ def _check_pipelined_k1(kind, scale, edge_factor, seed, source, strategy):
         np.testing.assert_array_equal(_fix(got), _fix(ref))
 
 
+def _check_null_pallas(kind, scale, edge_factor, seed, source, strategy,
+                       cap, dynamic):
+    """The Pallas row: `use_pallas=True` (interpret mode) over the same
+    strategies, bitwise against BOTH the XLA engine at the same strategy
+    and the dense reference — with the on-device dynamic block table
+    (`dynamic=True`, the default) and the degenerate full-table fallback
+    (`dynamic=False`)."""
+    g = _graph(kind, scale, edge_factor, seed)
+    part = DevicePartition.from_graph(g)
+    for prog in (algorithms.bfs_program(),
+                 algorithms.sssp_program(num_sources=len(MULTI_SOURCES))):
+        multi = prog.payload_shape != ()
+        src = MULTI_SOURCES if multi else source
+        ref = _single_shard(prog, part, source=src)
+        xla = _single_shard(prog, part, source=src, frontier=strategy,
+                            cap=cap)
+        eng = GREEngine(prog, frontier=strategy, frontier_cap=cap,
+                        use_pallas=True, dynamic_table=dynamic)
+        got = np.asarray(eng.run(part, eng.init_state(part, source=src),
+                                 300).vertex_data)
+        np.testing.assert_array_equal(got, xla)
+        np.testing.assert_array_equal(got, ref)
+
+
 @pytest.mark.parametrize("strategy", STRATEGIES)
 @pytest.mark.parametrize("kind", ["rmat", "circulant"])
 def test_null_backend_strategy_matrix(kind, strategy):
     _check_null_matrix(kind, 7, 8, 5, 0, strategy, cap=32)
 
 
+@pytest.mark.parametrize("dynamic", [True, False],
+                         ids=["dynamic-table", "full-table"])
+@pytest.mark.parametrize("strategy", ("compact", "auto", "flat"))
+def test_null_backend_pallas_matrix(strategy, dynamic):
+    _check_null_pallas("rmat", 7, 8, 5, 0, strategy, 32, dynamic)
+
+
 @pytest.mark.parametrize("strategy", ("dense", "compact", "auto"))
 def test_pipelined_k1_strategy_matrix(strategy):
     _check_pipelined_k1("rmat", 7, 8, 5, 0, strategy)
+
+
+def test_pipelined_k1_pallas():
+    """Pallas tile combine (dynamic table) through the pipelined backend's
+    split edge tiles on a 1-device mesh: bitwise vs the dense XLA
+    reference."""
+    g = _graph("rmat", 7, 8, 5)
+    part = DevicePartition.from_graph(g)
+    prog = algorithms.sssp_program()
+    ref = _single_shard(prog, part, source=0)
+    got = _pipelined(prog, g, source=0, frontier="compact", frontier_cap=64,
+                     use_pallas=True)
+    np.testing.assert_array_equal(_fix(got), _fix(ref))
 
 
 try:
@@ -142,6 +193,27 @@ if HAVE_HYPOTHESIS:
                                                  seed, source, strategy):
         _check_pipelined_k1(kind, scale, edge_factor, seed, source, strategy)
 
+    # fixed-seed twin: test_null_backend_pallas_matrix
+    @settings(max_examples=6, deadline=None)
+    @given(kind=st.sampled_from(["rmat", "circulant"]),
+           scale=st.integers(5, 7), edge_factor=st.integers(2, 8),
+           seed=st.integers(0, 999), source=st.integers(0, 31),
+           strategy=st.sampled_from(("compact", "auto", "flat")),
+           dynamic=st.booleans())
+    def test_null_backend_pallas_matrix_random(kind, scale, edge_factor,
+                                               seed, source, strategy,
+                                               dynamic):
+        _check_null_pallas(kind, scale, edge_factor, seed, source, strategy,
+                           32, dynamic)
+
+    # fixed-seed twin: test_dynamic_block_table_fixed
+    @settings(max_examples=15, deadline=None)
+    @given(e=st.integers(1, 600), v=st.integers(1, 300),
+           d=st.sampled_from([1, 4, 8]), op=st.sampled_from(["min", "sum"]),
+           valid_frac=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+    def test_dynamic_block_table_random(e, v, d, op, valid_frac, seed):
+        _check_dynamic_table(e, v, d, op, valid_frac, seed)
+
 
 @pytest.mark.parametrize("strategy", STRATEGIES)
 def test_cc_strategy_matrix(strategy):
@@ -153,6 +225,103 @@ def test_cc_strategy_matrix(strategy):
     got = _single_shard(algorithms.cc_program(), part, frontier=strategy,
                         cap=16)
     np.testing.assert_array_equal(got, ref)
+
+
+# ------------------------------------------------------- plan composition
+def test_superstep_plan_composition():
+    """The plan surface: engines expose the composed mode as ONE static
+    object — frontier strategy request, kernel stage, and the phase shape
+    the selected backend's protocol drives — and the recorded phase shape
+    matches the backend's `phases` attribute."""
+    import jax
+    from repro.core.exchange import NULL_EXCHANGE
+    from repro.core.plan import KernelPlan
+    prog = algorithms.bfs_program()
+    eng = GREEngine(prog, frontier="compact", use_pallas=True,
+                    dynamic_table=False, frontier_cap=64)
+    plan = eng.make_plan()
+    assert plan.phases == NULL_EXCHANGE.phases == "sync"
+    assert plan.strategy == "compact" and plan.frontier_cap == 64
+    assert plan.kernel == KernelPlan(use_pallas=True, dynamic_table=False)
+    # the frontier stage resolves per partition (bucketed on this graph)
+    part = DevicePartition.from_graph(_graph("rmat", 7, 8, 5))
+    fp = plan.frontier(part)
+    assert fp.kind == "bucketed" and sum(fp.caps) > 0
+    mesh = jax.make_mesh((1,), ("graph",))
+    for exchange, phases in (("pipelined", "pipelined"), ("agent", "sync")):
+        dist = DistGREEngine(prog, mesh, ("graph",), exchange=exchange)
+        assert dist.plan.phases == phases
+        backend_cls = {"pipelined": "PipelinedAgentExchange",
+                       "agent": "AgentExchange"}[exchange]
+        from repro.core import exchange as ex
+        assert getattr(ex, backend_cls).phases == phases
+    # calibration between construction and run is honored: the plan is
+    # rebuilt on access, never a stale frozen copy
+    dist = DistGREEngine(prog, mesh, ("graph",), exchange="agent")
+    dist.local.frontier_cap = 8
+    assert dist.plan.frontier_cap == 8
+
+
+# ------------------------------------------- dynamic block table (kernels)
+def _check_dynamic_table(e, v, d, op, valid_frac, seed, block=64):
+    """The on-device pruning pass vs the full table vs the XLA oracle, on
+    a tile with `valid_frac` real lanes and sentinel (`dst == v`) padding:
+    min/max must be bitwise, sum to float tolerance (the dst-sort
+    reorders); the dynamic table must visit a subset of the full table's
+    pairs that still covers every real edge block."""
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.segment_combine import (dynamic_block_table,
+                                               tile_segment_combine_pallas)
+    rng = np.random.default_rng(seed)
+    valid = rng.random(e) < valid_frac
+    dst = np.where(valid, rng.integers(0, v, e), v).astype(np.int32)
+    ident = {"sum": 0.0, "min": np.inf, "max": -np.inf}[op]
+    msgs = rng.normal(size=(e, d)).astype(np.float32)
+    msgs[~valid] = ident
+    kw = dict(block_e=block, block_v=block)
+    dyn = tile_segment_combine_pallas(jnp.asarray(msgs), jnp.asarray(dst),
+                                      v, op, **kw)
+    full = tile_segment_combine_pallas(jnp.asarray(msgs), jnp.asarray(dst),
+                                       v, op, dynamic=False, **kw)
+    want = ref.segment_combine_ref(jnp.asarray(msgs),
+                                   jnp.asarray(np.where(valid, dst, 0)),
+                                   v, op)
+    fix = lambda x: np.nan_to_num(np.asarray(x), posinf=1e30, neginf=-1e30)
+    if op == "sum":
+        np.testing.assert_allclose(fix(dyn), fix(want), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(fix(full), fix(want), rtol=1e-5,
+                                   atol=1e-5)
+    else:
+        np.testing.assert_array_equal(fix(dyn), fix(want))
+        np.testing.assert_array_equal(fix(full), fix(want))
+    # coverage: every (dst block, edge block) pair with a real dst in the
+    # dst block's range appears in the sorted tile's table row
+    ds = np.sort(dst)
+    n_e = -(-e // block)
+    table = np.asarray(dynamic_block_table(jnp.asarray(ds), v, block, block))
+    dpad = np.concatenate([ds, np.full(n_e * block - e, v, np.int32)])
+    dpad = dpad.reshape(n_e, block)
+    for i in range(table.shape[0]):
+        lo, hi = i * block, (i + 1) * block
+        need = {j for j in range(n_e)   # real dsts only: sentinels (>= v)
+                if ((dpad[j] >= lo) & (dpad[j] < hi)
+                    & (dpad[j] < v)).any()}
+        have = {int(x) for x in table[i] if x < n_e}
+        assert need <= have
+    # pruning: all-sentinel edge blocks never appear anywhere
+    empty = {j for j in range(n_e) if (dpad[j] >= v).all()}
+    seen = {int(x) for x in table.ravel() if x < n_e}
+    assert not (empty & seen)
+
+
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+@pytest.mark.parametrize("e,v,d,valid_frac",
+                         [(1000, 300, 8, 0.3), (513, 64, 1, 0.05),
+                          (256, 256, 4, 1.0), (77, 33, 16, 0.5)])
+def test_dynamic_block_table_fixed(e, v, d, valid_frac, op):
+    _check_dynamic_table(e, v, d, op, valid_frac, seed=0)
 
 
 # ------------------------------------------- multi-shard matrix (subprocess)
@@ -177,7 +346,7 @@ fix = lambda x: np.nan_to_num(x, posinf=-1.0)
 failures = []
 
 BACKENDS = ("agent", "dense", "pipelined")
-STRATEGIES = ("dense", "compact", "auto")
+STRATEGIES = ("dense", "flat", "compact", "auto")
 MULTI = [0, 7, 33, 101]
 
 def reference(program, part, source=None, max_steps=300):
@@ -219,6 +388,15 @@ got = dist(algorithms.sssp_program(), ag, "agent", "compact", source=0,
            overlap=True)
 if not np.array_equal(fix(got), fix(ss_ref)):
     failures.append("rmat sssp agent-overlap/compact")
+
+# The Pallas row (interpret mode): the tile combine's on-device dynamic
+# block table under shard_map, through both the sync agent backend and the
+# pipelined split tiles — bitwise vs the XLA dense reference.
+for backend in ("agent", "pipelined"):
+    got = dist(algorithms.sssp_program(), ag, backend, "compact", source=0,
+               use_pallas=True)
+    if not np.array_equal(fix(got), fix(ss_ref)):
+        failures.append(f"rmat sssp {backend}/compact/pallas-dynamic")
 
 # Circulant sub-matrix: the uniform-degree regime (single bucket live).
 gc = circulant_graph(1 << 11, degree=8, weights=True, seed=1)

@@ -310,14 +310,18 @@ def test_bc_batched_lanes_match_per_source_pipeline():
 
 
 # ------------------------------------------------------- pallas tile combine
-def test_bucketed_pallas_tile_combine_matches_xla():
-    """use_pallas routes the bucketed tiles through the full-block-table
-    kernel (interpret mode on CPU): bitwise vs the dense reference for the
-    min monoid."""
+@pytest.mark.parametrize("dynamic", [True, False],
+                         ids=["dynamic-table", "full-table"])
+def test_bucketed_pallas_tile_combine_matches_xla(dynamic):
+    """use_pallas routes the bucketed tiles through the Pallas tile combine
+    (interpret mode on CPU) — by default over the on-device
+    `dynamic_block_table` pruning pass, with the degenerate full table as
+    the `dynamic_table=False` fallback: bitwise vs the dense reference for
+    the min monoid either way."""
     g = rmat_edges(scale=6, edge_factor=8, seed=11, weights=True).dedup()
     part = DevicePartition.from_graph(g)
     dense = _run(algorithms.sssp_program(), part, source=0, frontier="dense")
     eng = GREEngine(algorithms.sssp_program(), frontier="compact",
-                    use_pallas=True)
+                    use_pallas=True, dynamic_table=dynamic)
     out = eng.run(part, eng.init_state(part, source=0), 300)
     np.testing.assert_array_equal(np.asarray(out.vertex_data), dense)

@@ -9,8 +9,9 @@ two-stage ⊕ reorders float adds), and bitwise against the synchronous
 AgentExchange (the edge tiles preserve per-segment reduction order).
 
 The in-process tests run the full pipelined machinery — `split_edge_tiles`,
-`PipelinedAgentExchange`, `GREEngine.run_pipelined` under `shard_map` — on
-a 1-device mesh (remote tile empty, flush collective degenerate).  The
+`PipelinedAgentExchange`, the plan executor's deferred-merge loop
+(`repro.core.plan.execute_plan`) under `shard_map` — on a 1-device mesh
+(remote tile empty, flush collective degenerate).  The
 multi-shard case needs the 8-device XLA_FLAGS set before jax initializes,
 so it runs in a subprocess (slow suite), exercising real cross-shard
 flushes and multi-source vector payloads; pipelined x frontier-strategy
