@@ -2,10 +2,11 @@
 committed BENCH_baseline.json.
 
   python benchmarks/compare.py BENCH_baseline.json BENCH_ci.json \
-      [--threshold 1.5] [--min-us 5000]
+      [--threshold 1.5] [--margin 1.25] [--floor 1.25] [--cap 2.5] \
+      [--min-us 5000]
 
-Fails (exit 1) when any benchmark present in BOTH files regressed by more
-than ``threshold``× in MACHINE-NORMALIZED us_per_call: every ratio is
+Fails (exit 1) when any benchmark present in BOTH files regressed past
+its PER-ENTRY margin in MACHINE-NORMALIZED us_per_call: every ratio is
 divided by the median ratio across shared benchmarks before gating.
 Shared CI runners vary in absolute speed — and differ from whatever
 machine produced the committed baseline — so a uniform 1.4× slowdown is
@@ -13,6 +14,17 @@ machine drift, not a regression; a single benchmark regressing relative
 to the rest of the suite (the compact path silently falling back to dense
 scans, an accidentally quadratic exchange) still sticks out.  Raw ratios
 are printed for trend reading.
+
+The per-entry margin comes from the baseline's own measured dispersion
+instead of one hand-picked headroom: ``benchmarks.common.time_fn``
+records each entry's max/median ratio across its timed iterations as
+``"noise"`` in BENCH_baseline.json, and an entry's threshold is
+``clamp(noise x --margin, --floor, --cap)`` — a rock-steady kernel
+microbenchmark (noise ~1.02) gates at the 1.25x floor, a
+scheduler-bimodal end-to-end run (noise ~1.8) gets the headroom its own
+history proves it needs, and ``--cap`` stops a pathologically noisy
+baseline from disabling its gate entirely.  Entries with no recorded
+noise fall back to the uniform ``--threshold``.
 
 Entries whose baseline is under ``--min-us`` are reported but never gate
 (sub-millisecond timings are runner noise), as are entries whose baseline
@@ -44,8 +56,17 @@ def main(argv=None) -> int:
     ap.add_argument("baseline")
     ap.add_argument("current")
     ap.add_argument("--threshold", type=float, default=1.5,
-                    help="fail when the machine-normalized current/baseline "
-                         "ratio exceeds this")
+                    help="fallback margin for entries with no recorded "
+                         "noise: fail when the machine-normalized "
+                         "current/baseline ratio exceeds this")
+    ap.add_argument("--margin", type=float, default=1.25,
+                    help="per-entry margin = recorded noise x this")
+    ap.add_argument("--floor", type=float, default=1.25,
+                    help="minimum per-entry margin (quiet entries still "
+                         "get this much headroom)")
+    ap.add_argument("--cap", type=float, default=2.5,
+                    help="maximum per-entry margin (a noisy baseline "
+                         "cannot disable its own gate)")
     ap.add_argument("--min-us", type=float, default=5000.0,
                     help="baselines under this never gate (noise floor)")
     args = ap.parse_args(argv)
@@ -60,6 +81,12 @@ def main(argv=None) -> int:
     # meaningful, otherwise gate on raw ratios
     def gates(rec):
         return rec["us_per_call"] >= args.min_us and rec.get("gate", True)
+
+    def entry_threshold(rec):
+        noise = rec.get("noise")
+        if noise is None:
+            return args.threshold
+        return max(args.floor, min(args.cap, noise * args.margin))
 
     solid = [r for n, r in ratios.items() if gates(base[n])]
     speed = statistics.median(solid) if len(solid) >= 3 else 1.0
@@ -76,15 +103,18 @@ def main(argv=None) -> int:
         ratio = ratios[name]
         norm = ratio / speed
         gated = gates(b)
+        limit = entry_threshold(b)
         flag = ""
-        if norm > args.threshold:
+        if norm > limit:
             flag = " REGRESSION" if gated else " (regressed, ungated)"
             if gated:
                 regressions.append(name)
         rows.append(f"    {name}: {b['us_per_call']:.0f} -> "
                     f"{c['us_per_call']:.0f} us ({ratio:.2f}x raw, "
-                    f"{norm:.2f}x normalized){flag}")
-    print(f"perf gate: threshold {args.threshold}x normalized, "
+                    f"{norm:.2f}x normalized, limit {limit:.2f}x){flag}")
+    print(f"perf gate: noise-margin x{args.margin} "
+          f"(floor {args.floor}x, cap {args.cap}x, "
+          f"fallback {args.threshold}x normalized), "
           f"noise floor {args.min_us:.0f} us, "
           f"machine-speed factor {speed:.2f}x")
     print("\n".join(rows))
@@ -93,8 +123,8 @@ def main(argv=None) -> int:
               f"the current run: {missing} — a dropped benchmark can't "
               "gate; remove it from BENCH_baseline.json if intentional")
     if regressions:
-        print(f"\nFAIL: {len(regressions)} regression(s) > "
-              f"{args.threshold}x: {regressions}")
+        print(f"\nFAIL: {len(regressions)} regression(s) past their "
+              f"per-entry margin: {regressions}")
     if missing or regressions:
         return 1
     print("\nOK: no gated regressions, no missing benchmarks")

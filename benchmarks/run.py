@@ -16,7 +16,7 @@ import sys
 
 from benchmarks import (bench_exchange_overlap, bench_frontier,
                         bench_gas_vs_sc, bench_memory, bench_pagerank,
-                        bench_partition, bench_traversal,
+                        bench_partition, bench_traversal, bench_tuning,
                         bench_vector_combine, bench_weak, common)
 
 SUITES = {
@@ -29,6 +29,7 @@ SUITES = {
     "memory": bench_memory.main,         # §7.1.2 memory claim
     "gas_vs_sc": bench_gas_vs_sc.main,   # §2.2 motivation
     "vector": bench_vector_combine.main, # D=64 feature-vector payloads
+    "tuning": bench_tuning.main,         # plan autotuner vs defaults
 }
 
 # Reduced-scale configs for the CI smoke run (seconds, not minutes); suites
@@ -45,6 +46,10 @@ SMOKE = {
     "exchange_overlap": lambda: bench_exchange_overlap.run(scale=10, k=2,
                                                            steps=24, iters=9),
     "vector": lambda: bench_vector_combine.run(scale=8, d_feat=64, iters=2),
+    # powerlaw iters=7: the tuned-vs-default comparison is interleaved,
+    # but the ~3ms BA runs still need a wide median on 2-core hosts
+    "tuning": lambda: (bench_tuning.run(scale=11, iters=3),
+                       bench_tuning.run_powerlaw(scale=10, iters=7)),
 }
 
 

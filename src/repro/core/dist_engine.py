@@ -63,7 +63,7 @@ class DistGREEngine:
                  exchange: str = "agent", overlap: bool = False,
                  use_pallas: bool = False, frontier: str = "auto",
                  frontier_cap: Optional[int] = None,
-                 dynamic_table: bool = True):
+                 dynamic_table: bool = True, plan=None, plan_cache=None):
         assert exchange in self.EXCHANGES, exchange
         # NullExchange never communicates: correct only on a 1-device mesh
         # (useful to A/B the shard_map plumbing against GREEngine).
@@ -80,6 +80,51 @@ class DistGREEngine:
         self.local = GREEngine(program, use_pallas=use_pallas,
                                frontier=frontier, frontier_cap=frontier_cap,
                                dynamic_table=dynamic_table)
+        # plan=SuperstepPlan adopts the composed mode now (its phase shape
+        # picks between the Agent-Graph protocol's sync and pipelined
+        # variants); plan="auto-tuned" defers to the persistent tuned-plan
+        # cache, consulted — keyed by (agent-graph fingerprint, program
+        # payload, MESH SIZE) — the first time an AgentGraph is in hand
+        # (device_topology/init_state/make_run), before any topology or
+        # trace bakes in the static shapes.  Misses keep the knobs above.
+        self._plan_cache = plan_cache
+        self._auto_plan_pending = False
+        if plan is None:
+            pass
+        elif plan == "auto-tuned":
+            self._auto_plan_pending = True
+        else:
+            self.adopt_plan(plan)
+
+    def adopt_plan(self, plan) -> None:
+        """Take a composed SuperstepPlan mesh-wide: the frontier/kernel
+        stages land on the local engine (`GREEngine.adopt_plan`) and the
+        phase shape selects the exchange variant — "pipelined" switches
+        to the split-tile PipelinedAgentExchange, "sync" demotes a
+        pipelined selection back to the sync AgentExchange (dense/null
+        baselines are left alone: the plan tunes the Agent-Graph
+        protocol, not the baseline)."""
+        self.local.adopt_plan(plan)
+        if plan.phases == "pipelined":
+            self.exchange = "pipelined"
+        elif self.exchange == "pipelined":
+            self.exchange = "agent"
+
+    def _resolve_auto_plan(self, ag: AgentGraph) -> None:
+        """`plan="auto-tuned"` resolution against the persistent cache
+        (see `GREEngine._consult_plan_cache`); the key folds in the mesh
+        size and the agent graph's remote-destination edge fraction —
+        the fingerprint facets a single-shard tuning run can't see."""
+        self._auto_plan_pending = False
+        from repro.tuning import PlanCache, plan_cache_key
+        cache = self._plan_cache
+        if not isinstance(cache, PlanCache):
+            cache = PlanCache(cache)
+        key = plan_cache_key(agent_graph=ag, program=self.program,
+                             mesh_size=self.mesh.size)
+        plan = cache.lookup(key)
+        if plan is not None:
+            self.adopt_plan(plan)
 
     @property
     def plan(self):
@@ -122,6 +167,8 @@ class DistGREEngine:
         columns twice would double per-device edge memory for arrays the
         pipelined path never reads.
         """
+        if self._auto_plan_pending:
+            self._resolve_auto_plan(ag)
         aux = {"out_degree": jnp.asarray(ag.out_degree),
                "global_id": jnp.asarray(
                    ag.new2old.reshape(ag.k, ag.cap).astype(np.float32))}
@@ -198,6 +245,8 @@ class DistGREEngine:
         """Stacked initial state [k, ...]; `source` is an ORIGINAL vertex id,
         or — for `payload_shape=(D,)` multi-source programs — a length-D
         sequence of original ids (source d seeds payload lane d)."""
+        if self._auto_plan_pending:
+            self._resolve_auto_plan(ag)
         p = self.program
         k, cap, slots = ag.k, ag.cap, ag.num_slots
         aux = {"out_degree": jnp.asarray(ag.out_degree),   # [k, cap]
@@ -232,6 +281,8 @@ class DistGREEngine:
     # ------------------------------------------------------------------- run
     def make_run(self, ag: AgentGraph, max_steps: int = 100):
         """Build the jitted distributed run function over the mesh."""
+        if self._auto_plan_pending:
+            self._resolve_auto_plan(ag)
         spec_leading = P(self.axes if len(self.axes) > 1 else self.axes[0])
 
         def squeeze0(tree):

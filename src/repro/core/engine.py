@@ -91,14 +91,22 @@ class DevicePartition:
 
     @staticmethod
     def from_graph(graph, pad_to: Optional[int] = None,
-                   sort_by_dst: bool = True, transpose: bool = False):
+                   sort_by_dst: bool = True, transpose: bool = False,
+                   bucket_bounds: Optional[tuple] = None):
         """Whole graph on one shard (no agents; slots = V + sink).
 
         `transpose=True` builds the partition of the reversed graph — the
         backward-traversal substrate for multi-stage algorithms (paper §4.2:
         Brandes' δ accumulation runs on the transposed graph).
+
+        `bucket_bounds` overrides the default degree-bucket ladder
+        (`graph.structures.DEFAULT_BUCKET_BOUNDS`) — the plan autotuner
+        (repro.tuning) probes candidate ladders by rebuilding the
+        partition per bounds, and a tuned `SuperstepPlan` carrying
+        non-None `bucket_bounds` expects a partition built with them.
         """
-        from repro.graph.structures import (csr_layout, degree_buckets,
+        from repro.graph.structures import (DEFAULT_BUCKET_BOUNDS,
+                                            csr_layout, degree_buckets,
                                             pad_edges, sort_edges_by_dst)
         if transpose:
             graph = graph.reversed()
@@ -111,7 +119,9 @@ class DevicePartition:
         props = {k: np.pad(p, (0, e_pad - graph.num_edges)) for k, p in props.items()}
         out_deg = graph.out_degree().astype(np.float32)
         indptr, eidx, max_deg = csr_layout(psrc, mask, v + 1)
-        bucket_id, sizes, max_degs = degree_buckets(indptr, v + 1)
+        bucket_id, sizes, max_degs = degree_buckets(
+            indptr, v + 1, bounds=tuple(bucket_bounds or
+                                        DEFAULT_BUCKET_BOUNDS))
         return DevicePartition(
             src=jnp.asarray(psrc), dst=jnp.asarray(pdst),
             edge_mask=jnp.asarray(mask), num_masters=v, num_slots=v + 1,
@@ -173,7 +183,7 @@ class GREEngine:
     def __init__(self, program: VertexProgram, use_pallas: bool = False,
                  dense_frontier: Optional[bool] = None,
                  frontier: str = "auto", frontier_cap: Optional[int] = None,
-                 dynamic_table: bool = True):
+                 dynamic_table: bool = True, plan=None, plan_cache=None):
         assert frontier in self.FRONTIERS, frontier
         self.program = program
         self.use_pallas = use_pallas
@@ -188,6 +198,64 @@ class GREEngine:
         # the monoid identity so padded edges still contribute nothing).
         self.dense_frontier = (dense_frontier if dense_frontier is not None
                                else not program.halts)
+        # `plan` overrides the knob-by-knob arguments with one composed
+        # SuperstepPlan, or requests a persisted tuned plan:
+        #   plan=SuperstepPlan(...)  — adopt its stages now;
+        #   plan="auto-tuned"       — consult the tuned-plan cache
+        #       (repro.tuning.cache.PlanCache at `plan_cache`, else the
+        #       default location) the first time a partition is in hand
+        #       (init_state — the last eager point before the jitted run
+        #       traces its static tile shapes).  Cache hits adopt the
+        #       stored plan without any probe execution; misses keep the
+        #       defaults above.
+        # `bucket_bounds` records the degree-bucket ladder an adopted tuned
+        # plan was probed against (None = partition default); callers
+        # rebuild matching partitions via
+        # DevicePartition.from_graph(bucket_bounds=...).
+        self.bucket_bounds = None
+        self.frontier_hist = None   # set by calibrate_frontier_cap
+        self._plan_cache = plan_cache
+        self._auto_plan_pending = False
+        if plan is None:
+            pass
+        elif plan == "auto-tuned":
+            self._auto_plan_pending = True
+        else:
+            self.adopt_plan(plan)
+
+    def adopt_plan(self, plan: SuperstepPlan) -> None:
+        """Take a composed SuperstepPlan's stages as this engine's knobs
+        (the inverse of `make_plan`).  Must run before the first jitted
+        `run` trace — the adopted frontier capacity and kernel route are
+        static compile-time decisions (same contract as
+        `calibrate_frontier_cap`)."""
+        assert plan.strategy in self.FRONTIERS, plan.strategy
+        self.frontier = plan.strategy
+        self.frontier_cap = plan.frontier_cap
+        self.dense_frontier = plan.dense_frontier
+        self.use_pallas = plan.kernel.use_pallas
+        self.dynamic_table = plan.kernel.dynamic_table
+        self.bucket_bounds = plan.bucket_bounds
+
+    def _consult_plan_cache(self, part: DevicePartition,
+                            state: EngineState) -> None:
+        """`plan="auto-tuned"` resolution: probe the live frontier
+        histogram (the fingerprint's density facet — the same measurement
+        `tune()` keys its stored plans by), look the partition's
+        fingerprint up in the persistent plan cache (repro.tuning); a hit
+        adopts the stored plan (no evaluator probes run — the whole point
+        of the cache), a miss keeps the engine's defaults."""
+        self._auto_plan_pending = False
+        from repro.tuning import PlanCache, plan_cache_key
+        cache = self._plan_cache
+        if not isinstance(cache, PlanCache):
+            cache = PlanCache(cache)
+        hist = self.probe_frontier_hist(part, state)
+        key = plan_cache_key(part=part, program=self.program, mesh_size=1,
+                             frontier_hist=hist)
+        plan = cache.lookup(key)
+        if plan is not None:
+            self.adopt_plan(plan)
 
     def make_plan(self, phases: str = "sync") -> SuperstepPlan:
         """The engine's SuperstepPlan (repro.core.plan): frontier strategy
@@ -211,28 +279,47 @@ class GREEngine:
 
     def calibrate_frontier_cap(self, part: DevicePartition,
                                state: EngineState, probe_steps: int = 2,
-                               ) -> int:
+                               ) -> list:
         """Derive `frontier_cap` from the LIVE frontier sizes of the first
         superstep(s) instead of a fixed fraction of `num_slots` (which
         over-allocates on large shards — see `frontier.default_cap`).
 
-        Runs up to `probe_steps` dense supersteps eagerly (the state is not
+        Runs up to `probe_steps` dense supersteps (the state is not
         consumed; callers re-run from the same initial state) and records
-        the frontier-size histogram.  Must be called BEFORE the first
-        jitted `run` trace: the capacity is a static compile-time shape.
+        the frontier-size histogram — the PROBE state is threaded through
+        ONE jit-compiled superstep, so an N-step probe costs one trace
+        plus N executions instead of N eager op-by-op dispatches.  Must
+        be called BEFORE the first jitted `run` trace: the capacity is a
+        static compile-time shape.  Sets `self.frontier_cap` and returns
+        the measured histogram (also kept on `self.frontier_hist`) — the
+        tuner's graph fingerprint reuses it as its frontier-density
+        estimate rather than re-probing.
         """
         from repro.core.frontier import default_cap
+        self.frontier_hist = self.probe_frontier_hist(part, state,
+                                                      probe_steps)
+        self.frontier_cap = default_cap(part.num_slots,
+                                        frontier_hist=self.frontier_hist)
+        return self.frontier_hist
+
+    def probe_frontier_hist(self, part: DevicePartition, state: EngineState,
+                            probe_steps: int = 2) -> list:
+        """The shared probe harness's frontier measurement: run up to
+        `probe_steps` dense supersteps from `state` (not consumed) and
+        return the live frontier-size histogram `[|F_0|, |F_1|, ...]`.
+        One dense-strategy superstep is jitted once and reused across
+        probe steps."""
         probe = GREEngine(self.program, dense_frontier=self.dense_frontier,
                           frontier="dense")
+        step = jax.jit(lambda s: probe.superstep(part, s))
         hist, s = [], state
         for _ in range(probe_steps):
             n = int(jnp.sum(s.active_scatter))
             if n == 0:
                 break
             hist.append(n)
-            s = probe.superstep(part, s)
-        self.frontier_cap = default_cap(part.num_slots, frontier_hist=hist)
-        return self.frontier_cap
+            s = step(s)
+        return hist
 
     # ------------------------------------------------------------------ init
     def init_state(self, part: DevicePartition,
@@ -258,8 +345,14 @@ class GREEngine:
                 vertex_data = vertex_data.at[src_idx, lanes].set(0.0)
                 scatter_data = scatter_data.at[src_idx, lanes].set(0.0)
                 active = jnp.zeros(s, dtype=bool).at[src_idx].set(True)
-        return EngineState(vertex_data, scatter_data, active,
-                           jnp.zeros((), jnp.int32))
+        state = EngineState(vertex_data, scatter_data, active,
+                            jnp.zeros((), jnp.int32))
+        if self._auto_plan_pending:
+            # plan="auto-tuned": the seeded state is the last eager point
+            # before a jitted run trace fixes the static tile shapes, and
+            # the cache key's frontier-density facet needs it
+            self._consult_plan_cache(part, state)
+        return state
 
     # ------------------------------------------------------- scatter-combine
     def scatter_combine(self, part: DevicePartition, state: EngineState,

@@ -117,16 +117,78 @@ class SuperstepPlan:
     shape, and kernel stage.  Static/hashable so it can parameterize jitted
     drivers; the per-partition frontier resolution happens at trace time
     via `frontier(part)` (pipelined backends carry TWO edge-tile
-    partitions, each resolving its own tile shapes)."""
+    partitions, each resolving its own tile shapes).
+
+    `bucket_bounds` is INGRESS metadata, not a runtime knob: the degree
+    binning is baked into a partition when it is built
+    (`graph.structures.degree_buckets`), so a plan carrying non-None
+    bounds says "this plan was tuned against a partition binned with
+    these bounds" — the autotuner's evaluator (repro.tuning) rebuilds
+    partitions per candidate bounds, and engines adopting a tuned plan
+    record the bounds so callers can rebuild matching partitions
+    (`DevicePartition.from_graph(..., bucket_bounds=...)`).  None means
+    "whatever the partition was built with" (the default bounds).
+    """
 
     strategy: str = "auto"
     frontier_cap: Optional[int] = None
     dense_frontier: bool = False
     phases: str = "sync"
     kernel: KernelPlan = XLA_KERNEL
+    bucket_bounds: Optional[tuple] = None
 
     def __post_init__(self):
         assert self.phases in PHASES, self.phases
+        if self.bucket_bounds is not None:
+            # normalize to a hashable int tuple (JSON round-trips lists)
+            object.__setattr__(self, "bucket_bounds",
+                               tuple(int(b) for b in self.bucket_bounds))
+
+    # ---------------------------------------------------------- serialization
+    def to_json(self) -> dict:
+        """Plain-JSON form for the persistent plan cache
+        (repro.tuning.cache).  Nested `kernel` keeps the kernel stage's
+        fields grouped; `bucket_bounds` serializes as a list/None."""
+        return {
+            "strategy": self.strategy,
+            "frontier_cap": self.frontier_cap,
+            "dense_frontier": self.dense_frontier,
+            "phases": self.phases,
+            "kernel": {"use_pallas": self.kernel.use_pallas,
+                       "dynamic_table": self.kernel.dynamic_table},
+            "bucket_bounds": (None if self.bucket_bounds is None
+                              else list(self.bucket_bounds)),
+        }
+
+    @classmethod
+    def from_json(cls, data: dict) -> "SuperstepPlan":
+        """Inverse of `to_json`.  UNKNOWN fields are rejected, not
+        ignored: a cache entry written by a future plan schema must fail
+        loudly rather than silently execute with half its knobs dropped
+        (the cache stores a schema version too, but field-level rejection
+        catches hand-edited files)."""
+        known = {"strategy", "frontier_cap", "dense_frontier", "phases",
+                 "kernel", "bucket_bounds"}
+        unknown = set(data) - known
+        if unknown:
+            raise ValueError(f"SuperstepPlan.from_json: unknown field(s) "
+                             f"{sorted(unknown)}")
+        kdata = dict(data.get("kernel") or {})
+        kunknown = set(kdata) - {"use_pallas", "dynamic_table"}
+        if kunknown:
+            raise ValueError(f"SuperstepPlan.from_json: unknown kernel "
+                             f"field(s) {sorted(kunknown)}")
+        kernel = KernelPlan(use_pallas=bool(kdata.get("use_pallas", False)),
+                            dynamic_table=bool(kdata.get("dynamic_table",
+                                                         True)))
+        cap = data.get("frontier_cap")
+        bounds = data.get("bucket_bounds")
+        return cls(strategy=data.get("strategy", "auto"),
+                   frontier_cap=None if cap is None else int(cap),
+                   dense_frontier=bool(data.get("dense_frontier", False)),
+                   phases=data.get("phases", "sync"),
+                   kernel=kernel,
+                   bucket_bounds=None if bounds is None else tuple(bounds))
 
     def frontier(self, part: "DevicePartition") -> FrontierPlan:
         return resolve_frontier(self.strategy, self.frontier_cap,

@@ -9,10 +9,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks import compare  # noqa: E402
 
 
-def _write(path, names_us, ungated=()):
+def _write(path, names_us, ungated=(), noise=None):
     payload = {"results": [
-        {"name": n, "us_per_call": us, **({"gate": False} if n in ungated
-                                          else {})}
+        {"name": n, "us_per_call": us,
+         **({"gate": False} if n in ungated else {}),
+         **({"noise": noise[n]} if noise and n in noise else {})}
         for n, us in names_us.items()]}
     path.write_text(json.dumps(payload))
     return str(path)
@@ -82,3 +83,34 @@ def test_gate_false_entry_missing_still_fails(tmp_path):
     cur = _write(tmp_path / "cur.json",
                  {n: us for n, us in BASE.items() if n != "b"})
     assert compare.main([base, cur]) == 1
+
+
+# --------------------------------------------------- per-entry noise margins
+
+def test_noise_margin_widens_gate_for_noisy_entry(tmp_path):
+    """A 1.6x slowdown on an entry whose baseline recorded 1.6x dispersion
+    is within its own measured repeatability — no regression; the same
+    slowdown on a quiet entry (noise 1.02 -> margin at the 1.25x floor)
+    fails."""
+    noisy = _write(tmp_path / "noisy.json", BASE, noise={"b": 1.6})
+    quiet = _write(tmp_path / "quiet.json", BASE, noise={"b": 1.02})
+    cur = _write(tmp_path / "cur.json", {**BASE, "b": BASE["b"] * 1.6})
+    assert compare.main([noisy, cur]) == 0
+    assert compare.main([quiet, cur]) == 1
+
+
+def test_noise_margin_is_capped(tmp_path):
+    """A pathologically noisy baseline (noise 10x) cannot disable its own
+    gate: the margin is clamped at --cap (default 2.5x)."""
+    base = _write(tmp_path / "base.json", BASE, noise={"b": 10.0})
+    cur = _write(tmp_path / "cur.json", {**BASE, "b": BASE["b"] * 4})
+    assert compare.main([base, cur]) == 1
+
+
+def test_no_noise_falls_back_to_uniform_threshold(tmp_path):
+    """Entries without a recorded dispersion keep the legacy uniform
+    --threshold semantics."""
+    base = _write(tmp_path / "base.json", BASE)
+    cur = _write(tmp_path / "cur.json", {**BASE, "b": BASE["b"] * 1.4})
+    assert compare.main([base, cur]) == 0
+    assert compare.main([base, cur, "--threshold", "1.3"]) == 1

@@ -262,6 +262,66 @@ def test_superstep_plan_composition():
     assert dist.plan.frontier_cap == 8
 
 
+# ----------------------------------------------------- plan serialization
+def test_superstep_plan_json_round_trip():
+    """Every plan the search space can emit must survive
+    to_json -> (real JSON text) -> from_json EQUAL — the persistent plan
+    cache (repro.tuning.cache) stores nothing else."""
+    import json
+
+    from repro.core.plan import KernelPlan, SuperstepPlan
+    plans = [
+        SuperstepPlan(),
+        SuperstepPlan(strategy="flat", frontier_cap=64),
+        SuperstepPlan(strategy="compact", frontier_cap=128,
+                      bucket_bounds=(4, 16, 64, 256)),
+        SuperstepPlan(strategy="dense", dense_frontier=True,
+                      phases="pipelined",
+                      kernel=KernelPlan(use_pallas=True,
+                                        dynamic_table=False)),
+    ]
+    for plan in plans:
+        wire = json.loads(json.dumps(plan.to_json()))
+        assert SuperstepPlan.from_json(wire) == plan, plan
+
+
+def test_superstep_plan_json_rejects_unknown_fields():
+    """Schema drift fails loudly at load time — at the plan level AND
+    inside the nested kernel dict — instead of silently dropping a knob
+    a future version considered load-bearing."""
+    from repro.core.plan import SuperstepPlan
+    good = SuperstepPlan(strategy="flat", frontier_cap=64).to_json()
+    with pytest.raises(ValueError, match="unknown"):
+        SuperstepPlan.from_json({**good, "exchange_fanout": 4})
+    with pytest.raises(ValueError, match="unknown"):
+        SuperstepPlan.from_json(
+            {**good, "kernel": {**good["kernel"], "vector_width": 8}})
+
+
+def test_cached_plan_executes_bitwise_identical(tmp_path):
+    """A plan round-tripped through the persistent cache file must drive
+    `execute_plan` to BITWISE-identical results vs the in-memory
+    original: adopting a cached plan may never change semantics, only
+    speed."""
+    from repro.core.plan import SuperstepPlan
+    from repro.tuning import PlanCache
+    plan = SuperstepPlan(strategy="compact", frontier_cap=64)
+    cache = PlanCache(tmp_path / "plans.json")
+    cache.store("k", plan, probe_us=1.0)
+    reloaded = PlanCache(tmp_path / "plans.json").lookup("k")
+    assert reloaded == plan
+
+    g = _graph("rmat", 7, 8, 3)
+    prog = algorithms.sssp_program()
+    finals = []
+    for p in (plan, reloaded):
+        eng = GREEngine(prog, plan=p)
+        part = DevicePartition.from_graph(g, bucket_bounds=p.bucket_bounds)
+        finals.append(eng.run(part, eng.init_state(part, source=0), 64))
+    np.testing.assert_array_equal(np.asarray(finals[0].vertex_data),
+                                  np.asarray(finals[1].vertex_data))
+
+
 # ------------------------------------------- dynamic block table (kernels)
 def _check_dynamic_table(e, v, d, op, valid_frac, seed, block=64):
     """The on-device pruning pass vs the full table vs the XLA oracle, on

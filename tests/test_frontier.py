@@ -194,10 +194,12 @@ def test_calibrated_cap_tracks_live_frontier():
     prog = algorithms.bfs_program()
     eng = GREEngine(prog, frontier="compact")
     state = eng.init_state(part, source=1)     # a leaf
-    cap = eng.calibrate_frontier_cap(part, state)
-    assert cap == eng.frontier_cap
+    hist = eng.calibrate_frontier_cap(part, state)
+    assert hist == [1, 1]                      # leaf -> hub: size-1 fronts
+    cap = eng.frontier_cap
     assert cap <= 16, cap                      # 4x the observed size-1 front
     assert cap < default_cap(part.num_slots)   # fixed fraction: 256
+    assert eng.frontier_hist == hist           # the tuner's density facet
     out = eng.run(part, state, 10)
     want = np.full(n, 2.0, np.float32)
     want[1], want[0] = 0.0, 1.0

@@ -1,0 +1,310 @@
+"""Plan autotuner (repro.tuning): search-space validity, fingerprint
+quantization, cache semantics, and tuner determinism.
+
+The measured half is substituted with deterministic fake evaluators
+(`tune(..., evaluator=...)` injection point): a FIXED cost function makes
+the winner a pure function of the space enumeration order, so these
+tests pin the search's control flow — rung culling, default-plan
+seeding, (us, index) tie-breaking, and the cache-hit short-circuit that
+must run ZERO probes — without ever trusting wall clocks.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms
+from repro.core.engine import DevicePartition, GREEngine
+from repro.core.plan import KernelPlan, SuperstepPlan
+from repro.graph.generators import circulant_graph
+from repro.tuning import (PlanCache, PlanSearchSpace, ProbeEvaluator,
+                          SMOKE_SPACE, graph_fingerprint, plan_cache_key,
+                          program_fingerprint, successive_halving, tune)
+
+
+# ------------------------------------------------------------ fake evaluators
+class CostModelEvaluator(ProbeEvaluator):
+    """Deterministic cost: distance of the plan's capacity from a sweet
+    spot, dense heavily penalized — no clocks, winner is reproducible."""
+
+    SWEET = 64
+
+    def evaluate(self, plan, probe_steps=2, iters=1):
+        self.num_probes += 1
+        if plan.strategy == "dense":
+            return 1e6
+        cap = plan.frontier_cap or 10 ** 4
+        return 1000.0 + abs(cap - self.SWEET)
+
+
+class ExplodingEvaluator(ProbeEvaluator):
+    """Any probe execution is a test failure (the cache-hit contract)."""
+
+    def evaluate(self, plan, probe_steps=2, iters=1):
+        raise AssertionError("cache hit must not execute probes")
+
+
+@pytest.fixture
+def scenario():
+    g = circulant_graph(1 << 9, degree=8)
+    return algorithms.bfs_program(), g
+
+
+# ------------------------------------------------------- space enumeration
+def test_space_prunes_dense_duplicates():
+    """Dense ignores caps and bounds: ONE candidate per (phase, kernel),
+    not a cap x bounds grid of identical compiled programs."""
+    space = PlanSearchSpace()
+    cands = space.candidates(num_slots=4096, base_cap=64)
+    dense = [p for p in cands if p.strategy == "dense"]
+    assert len(dense) == 1
+    assert dense[0].frontier_cap is None and dense[0].bucket_bounds is None
+
+
+def test_space_flat_ignores_bucket_bounds():
+    cands = PlanSearchSpace().candidates(num_slots=4096, base_cap=64)
+    assert all(p.bucket_bounds is None for p in cands
+               if p.strategy == "flat")
+    # compact DOES sweep the ladders
+    compact_bounds = {p.bucket_bounds for p in cands
+                      if p.strategy == "compact"}
+    assert len(compact_bounds) == len(PlanSearchSpace().bucket_bounds)
+
+
+def test_space_caps_clamped_and_deduped():
+    """Capacities never exceed num_slots, and multipliers that collide
+    after clamping/rounding produce ONE candidate."""
+    cands = PlanSearchSpace(
+        cap_multipliers=(1.0, 2.0, 100.0, 200.0),
+        bucket_bounds=(None,)).candidates(num_slots=256, base_cap=64)
+    flat_caps = sorted(p.frontier_cap for p in cands
+                       if p.strategy == "flat")
+    assert flat_caps == [64, 128, 256]  # 100x and 200x both clamp to 256
+    assert all(c <= 256 for c in flat_caps)
+
+
+def test_space_pipelined_requires_split_tiles():
+    space = PlanSearchSpace(phases=("sync", "pipelined"))
+    solo = space.candidates(num_slots=4096, base_cap=64)
+    assert all(p.phases == "sync" for p in solo)
+    dist = space.candidates(num_slots=4096, base_cap=64,
+                            has_split_tiles=True)
+    assert any(p.phases == "pipelined" for p in dist)
+
+
+def test_space_dense_frontier_forces_dense_strategy():
+    """Iterative programs (halts=False) never compact — the space must
+    not waste probes on strategies their engines cannot take."""
+    cands = PlanSearchSpace().candidates(num_slots=4096, base_cap=64,
+                                         dense_frontier=True)
+    assert cands and all(p.strategy == "dense" for p in cands)
+    assert all(p.dense_frontier for p in cands)
+
+
+def test_space_prunes_noop_kernel():
+    """KernelPlan(False, False) is not a real route (the dynamic-table
+    bit only exists on the Pallas path)."""
+    space = PlanSearchSpace(kernels=(KernelPlan(use_pallas=False,
+                                                dynamic_table=False),))
+    assert space.candidates(num_slots=4096, base_cap=64) == ()
+
+
+# ------------------------------------------------------- fingerprint keys
+def test_fingerprint_quantizes_size():
+    """Graphs within a log2 bin share a key; an order of magnitude apart
+    do not."""
+    a = graph_fingerprint(10_000, 160_000)
+    assert a == graph_fingerprint(10_300, 165_000)  # ~3% larger: same bin
+    assert a != graph_fingerprint(100_000, 1_600_000)
+
+
+def test_fingerprint_skew_and_density_facets():
+    uniform = graph_fingerprint(4096, 65536, max_out_degree=16)
+    hub = graph_fingerprint(4096, 65536, max_out_degree=4096)
+    assert uniform != hub
+    sparse = graph_fingerprint(4096, 65536, frontier_hist=[1, 16])
+    flood = graph_fingerprint(4096, 65536, frontier_hist=[1, 2000])
+    assert sparse != flood
+    assert "fd" not in graph_fingerprint(4096, 65536)  # no hist, no facet
+
+
+def test_program_and_mesh_facets_split_keys(scenario):
+    prog, g = scenario
+    part = DevicePartition.from_graph(g)
+    assert (program_fingerprint(prog)
+            != program_fingerprint(algorithms.pagerank_program()))
+    k1 = plan_cache_key(part=part, program=prog, mesh_size=1)
+    k8 = plan_cache_key(part=part, program=prog, mesh_size=8)
+    assert k1 != k8
+
+
+# ------------------------------------------------------------- plan cache
+def test_cache_rejects_foreign_version(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({"version": 99, "entries": {}}))
+    with pytest.raises(ValueError, match="version"):
+        PlanCache(path).lookup("k")
+
+
+def test_cache_store_merges_concurrent_writers(tmp_path):
+    """Two caches on one file: the second store must not clobber the
+    first writer's entry (re-read + merge before the atomic rewrite)."""
+    path = tmp_path / "plans.json"
+    a, b = PlanCache(path), PlanCache(path)
+    a.store("ka", SuperstepPlan(strategy="flat", frontier_cap=32))
+    b.store("kb", SuperstepPlan(strategy="compact", frontier_cap=64))
+    fresh = PlanCache(path)
+    assert sorted(fresh.keys()) == ["ka", "kb"]
+    assert fresh.lookup("ka").frontier_cap == 32
+
+
+# -------------------------------------------------------- search + tune()
+def test_successive_halving_deterministic_tiebreak():
+    """Equal measurements resolve by candidate index — first enumerated
+    wins, every time."""
+    class Flat:
+        num_probes = 0
+
+        def evaluate(self, plan, steps, iters):
+            return 100.0
+    cands = [SuperstepPlan(strategy="flat", frontier_cap=c)
+             for c in (8, 16, 32, 64)]
+    for _ in range(3):
+        best, scores = successive_halving(cands, Flat(),
+                                          rungs=((2, 1), (8, 1)))
+        assert best == 0
+
+
+def test_successive_halving_reseeds_must_keep_into_final_rung():
+    """A default plan culled by the cheap rung still gets a final-rung
+    measurement (the never-slower-than-default guarantee needs it)."""
+    class CheapRungLies:
+        def __init__(self):
+            self.rung_calls = []
+
+        def evaluate(self, plan, steps, iters):
+            self.rung_calls.append((plan.frontier_cap, steps))
+            # cheap rung: default (cap None -> 0) looks worst; final
+            # rung: it is actually best
+            cap = plan.frontier_cap or 0
+            return (1000 - cap) if steps == 2 else cap + 1
+    cands = [SuperstepPlan(strategy="flat", frontier_cap=c)
+             for c in (8, 16, 32)] + [SuperstepPlan()]  # default, cap None
+    ev = CheapRungLies()
+    best, scores = successive_halving(cands, ev, rungs=((2, 1), (8, 1)),
+                                      must_keep=(3,))
+    assert best == 3  # the re-seeded default won the honest final rung
+    assert (None, 8) in ev.rung_calls
+
+
+def test_tune_fixed_evaluator_stable_winner(scenario, tmp_path):
+    """Same scenario, same space, fresh caches, deterministic evaluator:
+    identical winner both times."""
+    prog, g = scenario
+    winners = []
+    for i in range(2):
+        res = tune(prog, g, cache=tmp_path / f"c{i}.json",
+                   space=SMOKE_SPACE,
+                   evaluator=CostModelEvaluator(prog, g))
+        assert not res.from_cache and res.num_probes > 0
+        winners.append(res.plan)
+    assert winners[0] == winners[1]
+    assert winners[0].strategy != "dense"  # the cost model's 1e6 penalty
+
+
+def test_tune_cache_hit_runs_zero_probes(scenario, tmp_path):
+    prog, g = scenario
+    path = tmp_path / "plans.json"
+    first = tune(prog, g, cache=path, space=SMOKE_SPACE,
+                 evaluator=CostModelEvaluator(prog, g))
+    ev = ExplodingEvaluator(prog, g)  # evaluate() raises if ever called
+    hit = tune(prog, g, cache=path, space=SMOKE_SPACE, evaluator=ev)
+    assert hit.from_cache and hit.num_probes == 0 and ev.num_probes == 0
+    assert hit.plan == first.plan and hit.key == first.key
+    # force=True re-searches even on a hit
+    again = tune(prog, g, cache=path, space=SMOKE_SPACE, force=True,
+                 evaluator=CostModelEvaluator(prog, g))
+    assert not again.from_cache and again.plan == first.plan
+
+
+def test_tune_stores_default_measurement(scenario, tmp_path):
+    """The cache entry carries its provenance: winner AND default probe
+    times plus the space size searched."""
+    prog, g = scenario
+    res = tune(prog, g, cache=tmp_path / "c.json", space=SMOKE_SPACE,
+               evaluator=CostModelEvaluator(prog, g))
+    entry = PlanCache(tmp_path / "c.json").entry(res.key)
+    assert entry["probe_us"] <= entry["default_us"]
+    assert entry["space_size"] > 1
+
+
+# ------------------------------------------------------ engine integration
+def test_engine_auto_tuned_adopts_cached_plan(scenario, tmp_path):
+    prog, g = scenario
+    path = tmp_path / "plans.json"
+    res = tune(prog, g, cache=path, space=SMOKE_SPACE,
+               evaluator=CostModelEvaluator(prog, g))
+    eng = GREEngine(prog, plan="auto-tuned", plan_cache=path)
+    part = DevicePartition.from_graph(g)
+    state = eng.init_state(part, source=0)
+    assert eng.frontier == res.plan.strategy
+    assert eng.frontier_cap == res.plan.frontier_cap
+    # adopted plan changes speed, never semantics
+    ref = GREEngine(prog).run(part, GREEngine(prog).init_state(
+        part, source=0), 200)
+    got = eng.run(part, state, 200)
+    np.testing.assert_array_equal(np.asarray(got.vertex_data),
+                                  np.asarray(ref.vertex_data))
+
+
+def test_engine_auto_tuned_miss_keeps_defaults(scenario, tmp_path):
+    prog, g = scenario
+    eng = GREEngine(prog, plan="auto-tuned",
+                    plan_cache=tmp_path / "empty.json")
+    part = DevicePartition.from_graph(g)
+    eng.init_state(part, source=0)
+    assert eng.frontier == "auto" and eng.frontier_cap is None
+    assert not eng._auto_plan_pending
+
+
+def test_dist_engine_plan_maps_phase_to_exchange(scenario):
+    import jax
+    from repro.core.dist_engine import DistGREEngine
+    prog, _ = scenario
+    mesh = jax.make_mesh((1,), ("graph",))
+    dist = DistGREEngine(prog, mesh, ("graph",), exchange="pipelined")
+    dist.adopt_plan(SuperstepPlan(strategy="flat", frontier_cap=32,
+                                  phases="sync"))
+    assert dist.exchange == "agent"  # sync plan demotes pipelined
+    assert dist.local.frontier_cap == 32
+    dist.adopt_plan(SuperstepPlan(phases="pipelined"))
+    assert dist.exchange == "pipelined"
+
+
+def test_dist_engine_auto_tuned_consults_mesh_keyed_cache(scenario,
+                                                         tmp_path):
+    """The distributed engine resolves plan="auto-tuned" against the
+    mesh-size-qualified AgentGraph fingerprint (no frontier-density
+    facet — the histogram is a per-shard measurement), and the adopted
+    plan never changes results."""
+    import jax
+    from repro.core.agent_graph import build_agent_graph
+    from repro.core.dist_engine import DistGREEngine
+    from repro.core.partition import greedy_partition
+    from repro.tuning import plan_cache_key as key_of
+    prog, g = scenario
+    mesh = jax.make_mesh((1,), ("graph",))
+    ag = build_agent_graph(g, greedy_partition(g, 1), 1)
+    path = tmp_path / "plans.json"
+    stored = SuperstepPlan(strategy="flat", frontier_cap=32)
+    PlanCache(path).store(key_of(agent_graph=ag, program=prog,
+                                 mesh_size=1), stored)
+    dist = DistGREEngine(prog, mesh, ("graph",), plan="auto-tuned",
+                         plan_cache=path)
+    out, _ = dist.run(ag, source=0, max_steps=200)
+    assert dist.local.frontier == "flat" and dist.local.frontier_cap == 32
+    assert not dist._auto_plan_pending
+    ref, _ = DistGREEngine(prog, mesh, ("graph",)).run(ag, source=0,
+                                                       max_steps=200)
+    np.testing.assert_array_equal(np.nan_to_num(out, posinf=-1.0),
+                                  np.nan_to_num(ref, posinf=-1.0))
