@@ -3,7 +3,15 @@ committed BENCH_baseline.json.
 
   python benchmarks/compare.py BENCH_baseline.json BENCH_ci.json \
       [--threshold 1.5] [--margin 1.25] [--floor 1.25] [--cap 2.5] \
-      [--min-us 5000]
+      [--min-us 5000] [--only PREFIX ...] [--skip PREFIX ...]
+
+``--only``/``--skip`` (repeatable name PREFIXES) subset BOTH files before
+any comparison — shared set, missing-entry check, gating, and the
+machine-speed normalization all see only the selected entries.  CI jobs
+that produce disjoint slices of the artifact gate their own slice without
+tripping the missing-entry check for the rest: the main bench job runs
+``--skip serving_`` and the serving job runs ``--only serving_`` against
+the same committed baseline.
 
 Fails (exit 1) when any benchmark present in BOTH files regressed past
 its PER-ENTRY margin in MACHINE-NORMALIZED us_per_call: every ratio is
@@ -69,9 +77,22 @@ def main(argv=None) -> int:
                          "cannot disable its own gate)")
     ap.add_argument("--min-us", type=float, default=5000.0,
                     help="baselines under this never gate (noise floor)")
+    ap.add_argument("--only", action="append", default=[], metavar="PREFIX",
+                    help="compare only entries whose name starts with this "
+                         "prefix (repeatable; applied to both files)")
+    ap.add_argument("--skip", action="append", default=[], metavar="PREFIX",
+                    help="drop entries whose name starts with this prefix "
+                         "from both files before comparing (repeatable)")
     args = ap.parse_args(argv)
 
+    def selected(name: str) -> bool:
+        if args.only and not any(name.startswith(p) for p in args.only):
+            return False
+        return not any(name.startswith(p) for p in args.skip)
+
     base, cur = load(args.baseline), load(args.current)
+    base = {n: r for n, r in base.items() if selected(n)}
+    cur = {n: r for n, r in cur.items() if selected(n)}
     shared = sorted(set(base) & set(cur))
     ratios = {n: cur[n]["us_per_call"] / max(base[n]["us_per_call"], 1e-9)
               for n in shared}

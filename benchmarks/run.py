@@ -16,8 +16,9 @@ import sys
 
 from benchmarks import (bench_exchange_overlap, bench_frontier,
                         bench_gas_vs_sc, bench_memory, bench_pagerank,
-                        bench_partition, bench_traversal, bench_tuning,
-                        bench_vector_combine, bench_weak, common)
+                        bench_partition, bench_serving, bench_traversal,
+                        bench_tuning, bench_vector_combine, bench_weak,
+                        common)
 
 SUITES = {
     "pagerank": bench_pagerank.main,     # Table 5 / Fig. 8a-b
@@ -30,6 +31,10 @@ SUITES = {
     "gas_vs_sc": bench_gas_vs_sc.main,   # §2.2 motivation
     "vector": bench_vector_combine.main, # D=64 feature-vector payloads
     "tuning": bench_tuning.main,         # plan autotuner vs defaults
+    # serving is ALSO a standalone CI job (`python -m benchmarks.bench_serving
+    # --smoke --json ...` gated with `compare.py --only serving_`); the full
+    # suite runs it at full scale here
+    "serving": bench_serving.main,       # continuous batching vs re-init
 }
 
 # Reduced-scale configs for the CI smoke run (seconds, not minutes); suites

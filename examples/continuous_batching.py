@@ -1,43 +1,66 @@
-"""Continuous-batching LM serving: requests with different prompt lengths
-stream through a fixed 4-slot decode batch (no decode step waits for a
-prefill; static shapes — zero recompilation).
+"""Continuous batching of graph traversal queries over payload lanes.
+
+A Poisson stream of mixed BFS / SSSP / PPR queries hits a
+`ServingFrontend` (one `GraphQueryBatcher` per kind, D=4 lanes each) on a
+power-law graph.  Lanes recycle between supersteps: short queries stream
+through lanes a long query is not using, and the jitted superstep never
+recompiles.  See `examples/recsys_serve.py` for the same scheduler over a
+`DistGREEngine` mesh.
 
     PYTHONPATH=src python examples/continuous_batching.py
+    REPRO_SMOKE=1 PYTHONPATH=src python examples/continuous_batching.py  # CI
 """
+import os
 import time
 
 import numpy as np
-import jax
 
-from repro.configs import get_config
-from repro.launch.train import reduced_lm_config
-from repro.models import transformer as tfm
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.core import algorithms
+from repro.core.engine import DevicePartition, GREEngine
+from repro.graph.generators import rmat_edges
+from repro.serving import GraphQueryBatcher, ServingFrontend, poisson_ticks
 
-cfg, _ = get_config("smollm-135m")
-cfg = reduced_lm_config(cfg)
-params = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+SCALE = 8 if SMOKE else 12
+NUM_QUERIES = 12 if SMOKE else 64
+D = 4
+
+g = rmat_edges(scale=SCALE, edge_factor=8, seed=0, weights=True).dedup()
+part = DevicePartition.from_graph(g)
+print(f"graph: V={g.num_vertices} E={g.num_edges}")
+
+frontend = ServingFrontend({
+    "bfs": GraphQueryBatcher(GREEngine(algorithms.bfs_program(D)), part),
+    "sssp": GraphQueryBatcher(GREEngine(algorithms.sssp_program(D)), part),
+    # PPR pins frontier="dense" (docs/serving.md: sum monoids are bitwise
+    # order-stable only on a fixed strategy) and carries a superstep budget
+    "ppr": GraphQueryBatcher(
+        GREEngine(algorithms.ppr_push_program(D), frontier="dense"), part,
+        default_budget=256),
+})
 
 rng = np.random.default_rng(0)
-sched = ContinuousBatcher(params, cfg, batch_slots=4, max_len=96)
-reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=plen)
-                .astype(np.int32), max_new=12)
-        for i, plen in enumerate([8, 25, 12, 40, 16, 31, 9, 22])]
-for r in reqs:
-    sched.submit(r)
+kinds = rng.choice(["bfs", "sssp", "ppr"], size=NUM_QUERIES)
+roots = rng.integers(0, g.num_vertices, size=NUM_QUERIES)
+arrivals = poisson_ticks(NUM_QUERIES, rate_per_tick=1.5, rng=rng)
 
 t0 = time.time()
-steps = 0
-while any(not r.done for r in reqs):
-    active = sched.step()
-    steps += 1
-    if steps % 5 == 0:
-        done = sum(r.done for r in reqs)
-        print(f"step {steps:3d}: {active} active slots, {done}/8 done")
+done, nxt, rounds = [], 0, 0
+while len(done) < NUM_QUERIES:
+    while nxt < NUM_QUERIES and arrivals[nxt] <= rounds:  # Poisson arrivals
+        frontend.submit(str(kinds[nxt]), int(roots[nxt]))
+        nxt += 1
+    done.extend(frontend.step())
+    rounds += 1
 dt = time.time() - t0
-total = sum(len(r.out) for r in reqs)
-print(f"served 8 requests ({total} tokens) in {steps} scheduler steps, "
-      f"{dt:.1f}s ({total / dt:.1f} tok/s)")
-for r in reqs[:3]:
-    print(f"  req {r.uid} (prompt {len(r.prompt)}): {r.out[:6]}...")
-assert all(r.done and len(r.out) == 12 for r in reqs)
+
+print(f"served {len(done)} queries in {rounds} rounds, {dt:.1f}s "
+      f"({len(done) / dt:.1f} q/s)")
+for kind, m in frontend.metrics().items():
+    print(f"  {kind:5s} done={m['queries_done']:.0f} "
+          f"p50={m['latency_p50_s'] * 1e3:.0f}ms "
+          f"p95={m['latency_p95_s'] * 1e3:.0f}ms "
+          f"occupancy={m['lane_occupancy']:.2f} "
+          f"supersteps_p50={m['supersteps_p50']:.0f}")
+assert len(done) == NUM_QUERIES
+assert all(q.status in ("done", "evicted") for q in done)

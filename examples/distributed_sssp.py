@@ -7,7 +7,10 @@ Shows: greedy partitioning -> agent-graph build -> shard_map BSP execution
 -> paper-§6.3 snapshot (masters + bitmap only) -> restore and continue."""
 import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))  # tiny sizes in CI
+_K = 2 if SMOKE else 8
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={_K}")
 
 import numpy as np
 import jax
@@ -20,8 +23,9 @@ from repro.core.dist_engine import DistGREEngine
 from repro.core.partition import greedy_partition, partition_quality
 from repro.graph.generators import rmat_edges
 
-g = rmat_edges(scale=11, edge_factor=16, seed=0, weights=True).dedup()
-k = 8
+g = rmat_edges(scale=9 if SMOKE else 11, edge_factor=16, seed=0,
+               weights=True).dedup()
+k = _K
 part = greedy_partition(g, k, batch_size=256)
 q = partition_quality(g, part)
 print(f"|V|={g.num_vertices} |E|={g.num_edges} k={k} "

@@ -4,6 +4,8 @@
 
 The layer aggregation runs on the GRE scatter-combine primitive; labels are
 planted communities so accuracy is verifiable."""
+import os
+
 import numpy as np
 
 import jax
@@ -14,11 +16,12 @@ from repro.models.gnn import (GraphBatch, compute_gcn_edge_norm, gnn_forward,
                               gnn_loss, init_gnn)
 from repro.optim.adamw import AdamW
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))  # tiny sizes in CI
 cfg, _ = get_config("gcn-cora")
 rng = np.random.default_rng(0)
 
 # synthetic community graph: 7 planted clusters + noise edges
-V, C = 1400, cfg.n_classes
+V, C = (700 if SMOKE else 1400), cfg.n_classes
 labels = rng.integers(0, C, V)
 intra = [(u, v) for _ in range(V * 40)
          for u, v in [rng.integers(0, V, 2)] if labels[u] == labels[v]]
@@ -44,7 +47,7 @@ def step(p, o):
     return p, o, loss
 
 
-for it in range(250):
+for it in range(120 if SMOKE else 250):
     params, opt_state, loss = step(params, opt_state)
     if it % 30 == 0:
         print(f"iter {it:3d} loss {float(loss):.3f}")

@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import numpy as np
 
 from repro.core import algorithms
@@ -9,8 +11,10 @@ from repro.core.engine import DevicePartition, GREEngine
 from repro.core.partition import greedy_partition, hash_edge_cut, partition_quality
 from repro.graph.generators import rmat_edges
 
+SCALE = 9 if os.environ.get("REPRO_SMOKE") else 12  # tiny sizes in CI
+
 # 1. a Graph500-style scale-free graph (paper §7 generator parameters)
-g = rmat_edges(scale=12, edge_factor=16, seed=0).dedup()
+g = rmat_edges(scale=SCALE, edge_factor=16, seed=0).dedup()
 print(f"graph: |V|={g.num_vertices} |E|={g.num_edges}")
 
 # 2. run PageRank: 30 BSP supersteps of scatter -> combine -> apply
@@ -22,7 +26,7 @@ top = np.argsort(-pr)[:5]
 print("top-5 pagerank vertices:", [(int(v), round(float(pr[v]), 2)) for v in top])
 
 # 3. SSSP from vertex 0 (halts when no vertex is active)
-gw = rmat_edges(scale=12, edge_factor=16, seed=0, weights=True).dedup()
+gw = rmat_edges(scale=SCALE, edge_factor=16, seed=0, weights=True).dedup()
 pw = DevicePartition.from_graph(gw)
 engine = GREEngine(algorithms.sssp_program())
 state = engine.run(pw, engine.init_state(pw, source=0), max_steps=500)

@@ -78,6 +78,10 @@ def sssp_program(num_sources: Optional[int] = None) -> VertexProgram:
         combine_activates=combine_activates,
         halts=True, needs_edge_prop="weight",
         payload_shape=() if D is None else (D,),
+        # per-lane improvement = the min-fold actually lowering a distance;
+        # a lane with no improvement anywhere has converged (label
+        # correcting is monotone, so a quiet lane stays quiet)
+        lane_activates=None if D is None else (lambda vd, c: c < vd),
     )
 
 
@@ -144,6 +148,73 @@ def bfs_program(num_sources: Optional[int] = None) -> VertexProgram:
         init_active=lambda n, aux: jnp.zeros(n, dtype=bool),
         combine_activates=combine_activates, halts=True,
         payload_shape=() if D is None else (D,),
+        lane_activates=None if D is None else (lambda vd, c: c < vd),
+    )
+
+
+def ppr_push_program(num_sources: int, alpha: float = 0.15,
+                     eps: float = 1e-4) -> VertexProgram:
+    """Personalized PageRank by monotone forward push (Andersen-Chung-Lang),
+    batched over D payload lanes — the third traversal family the serving
+    layer (repro.serving.graph_scheduler) answers.
+
+    Per (vertex, lane) the state is an (estimate p, held residual r) pair:
+    `vertex_data` is `[n, D, 2]`.  A vertex whose total residual in lane d
+    exceeds `eps` PUSHES: p += α·r, and (1-α)·r/outdeg is scattered along
+    its out-edges (⊕ = sum accumulates incoming residual mass); sub-`eps`
+    residual is held until new mass arrives.  Active messages ARE the
+    pushes, so the frontier is exactly the above-threshold vertices and a
+    lane with no push anywhere has converged (`lane_activates`) —
+    monotonicity (p only grows, residual mass only moves or shrinks) gives
+    the same quiet-stays-quiet guarantee as the min-monoid traversals.
+
+    Seeding (`seed_sources`) performs the source's OWN first push at
+    admission time — p[s] = α, scatter share (1-α)/outdeg(s) staged — so
+    the very next superstep delivers it; lanes evolve independently
+    (pushes are decided per lane), which is what makes lane recycling
+    bitwise-safe for this program despite the sum monoid.
+    """
+    D = num_sources
+
+    def scatter_msg(src_scatter, _eprop):
+        return src_scatter  # scatter_data already holds (1-α)·r/outdeg
+
+    def combine_activates(_old_vd, combined):
+        return jnp.any(combined > 0.0, axis=-1)  # received any mass
+
+    def apply_fn(vertex_data, combined, aux):
+        p_est, r_hold = vertex_data[..., 0], vertex_data[..., 1]
+        r_total = r_hold + combined
+        push = r_total > eps
+        new_p = p_est + jnp.where(push, alpha * r_total, 0.0)
+        deg = jnp.maximum(aux["out_degree"], 1.0)[:, None]
+        new_sd = jnp.where(push, (1.0 - alpha) * r_total / deg, 0.0)
+        new_r = jnp.where(push, 0.0, r_total)
+        new_vd = jnp.stack([new_p, new_r], axis=-1)
+        return new_vd, new_sd, jnp.any(push, axis=-1)
+
+    def lane_activates(vertex_data, combined):
+        return (vertex_data[..., 1] + combined) > eps  # a push will happen
+
+    def seed_sources(vd, sd, src, lanes, aux):
+        deg = jnp.maximum(aux["out_degree"], 1.0)
+        n = deg.shape[0]
+        share = (1.0 - alpha) / jnp.take(deg, jnp.minimum(src, n - 1))
+        vd = vd.at[src, lanes, 0].set(alpha, mode="drop")
+        vd = vd.at[src, lanes, 1].set(0.0, mode="drop")
+        sd = sd.at[src, lanes].set(share, mode="drop")
+        return vd, sd
+
+    return VertexProgram(
+        name=f"ppr_x{D}", monoid=MONOIDS["sum"],
+        scatter_msg=scatter_msg, apply_fn=apply_fn,
+        init_vertex_data=lambda n, aux: jnp.zeros((n, D, 2), jnp.float32),
+        init_scatter_data=lambda n, aux: jnp.zeros((n, D), jnp.float32),
+        init_active=lambda n, aux: jnp.zeros(n, dtype=bool),
+        combine_activates=combine_activates, halts=True,
+        payload_shape=(D,),
+        lane_activates=lane_activates, seed_sources=seed_sources,
+        lane_view=lambda vd, lane: vd[:, lane, 0],
     )
 
 

@@ -31,6 +31,7 @@ engine.py/exchange.py/plan.py.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -44,9 +45,19 @@ from repro.core.exchange import (AgentExchange, DenseExchange, NullExchange,
                                  PipelinedAgentExchange, PipelineTiles,
                                  ShardTopology, flush_combiners,
                                  refresh_scatter_agents)
-from repro.core.plan import execute_plan
+from repro.core.plan import execute_plan, execute_superstep
 from repro.core.vertex_program import VertexProgram
 from repro.dist.sharding import shard_map
+
+
+def _squeeze0(tree):
+    """Drop the leading stacked axis of a device-local shard_map operand."""
+    return jax.tree.map(
+        lambda a: a[0] if hasattr(a, "ndim") and a.ndim > 0 else a, tree)
+
+
+def _unsqueeze0(tree):
+    return jax.tree.map(lambda a: a[None] if hasattr(a, "ndim") else a, tree)
 
 __all__ = ["DistGREEngine", "PipelineTiles", "PipelinedAgentExchange",
            "ShardTopology", "flush_combiners", "refresh_scatter_agents",
@@ -241,10 +252,16 @@ class DistGREEngine:
             num_combiners=ag.c_pad,
         )
 
-    def init_state(self, ag: AgentGraph, source=None):
+    def init_state(self, ag: AgentGraph, source=None,
+                   lane_tracking: bool = False):
         """Stacked initial state [k, ...]; `source` is an ORIGINAL vertex id,
         or — for `payload_shape=(D,)` multi-source programs — a length-D
-        sequence of original ids (source d seeds payload lane d)."""
+        sequence of original ids (source d seeds payload lane d; a `None`
+        or negative entry leaves lane d empty for later admission).
+
+        `lane_tracking=True` attaches the per-lane halt vector (replicated
+        `[k, D]` bool, kept mesh-global by the serving tick's pmax) so the
+        serving layer can retire converged lanes between supersteps."""
         if self._auto_plan_pending:
             self._resolve_auto_plan(ag)
         p = self.program
@@ -263,20 +280,79 @@ class DistGREEngine:
         # mask padding masters (no original vertex)
         real = jnp.asarray(ag.new2old.reshape(k, cap) >= 0)
         act = act.at[:, :cap].set(act[:, :cap] & real)
+        seeded = []
         if source is not None:
-            multi = np.ndim(source) > 0
+            multi = isinstance(source, (list, tuple, np.ndarray))
             act = jnp.zeros_like(act)
-            for d, sv in enumerate(np.atleast_1d(np.asarray(source))):
+            for d, sv in enumerate(source if multi else [source]):
+                ok = sv is not None and int(sv) >= 0
+                seeded.append(ok)
+                if not ok:
+                    continue
                 g = int(ag.old2new[int(sv)])
                 i, s = g // cap, g % cap
                 if multi:  # seed payload lane d only
-                    vd = vd.at[i, s, d].set(0.0)
-                    sd = sd.at[i, s, d].set(0.0)
+                    if p.seed_sources is not None:
+                        aux_i = {kk: v[i] for kk, v in aux.items()}
+                        vd_i, sd_i = p.seed_sources(
+                            vd[i], sd[i], jnp.array([s], jnp.int32),
+                            jnp.array([d], jnp.int32), aux_i)
+                        vd = vd.at[i].set(vd_i)
+                        sd = sd.at[i].set(sd_i)
+                    else:
+                        vd = vd.at[i, s, d].set(0.0)
+                        sd = sd.at[i, s, d].set(0.0)
                 else:
                     vd = vd.at[i, s].set(0.0)
                     sd = sd.at[i, s].set(0.0)
                 act = act.at[i, s].set(True)
-        return EngineState(vd, sd, act, jnp.zeros((k,), jnp.int32))
+        lane_active = None
+        if lane_tracking:
+            if p.lane_activates is None or not p.payload_shape:
+                raise ValueError(
+                    "lane_tracking needs a multi-source program with "
+                    "lane_activates (per-lane halt rule)")
+            D = p.payload_shape[0]
+            if len(seeded) not in (0, D):
+                raise ValueError(f"expected {D} source entries")
+            row = np.zeros(D, dtype=bool) if not seeded else np.array(seeded)
+            lane_active = jnp.broadcast_to(jnp.asarray(row)[None, :], (k, D))
+        return EngineState(vd, sd, act, jnp.zeros((k,), jnp.int32),
+                           lane_active)
+
+    # ------------------------------------------------------------------ tick
+    def make_superstep(self, ag: AgentGraph, steps_per_tick: int = 1):
+        """Build the jitted SERVING TICK: `steps_per_tick` supersteps over
+        the mesh with NO convergence loop around them — the serving layer
+        (repro.serving.graph_scheduler) owns the loop so it can retire and
+        admit payload lanes between ticks at static shape.
+
+        Each tick runs `plan.execute_superstep` per shard (per-tick merge:
+        a Mailbox carried across ticks would hold partial combines of a
+        retired query, so the pipelined backend still overlaps its flush
+        with the local-tile combine INSIDE the tick but never defers the
+        merge past it) and globalizes the per-lane halt vector with a
+        pmax, keeping `lane_active` replicated and host-readable."""
+        if self._auto_plan_pending:
+            self._resolve_auto_plan(ag)
+        spec_leading = P(self.axes if len(self.axes) > 1 else self.axes[0])
+
+        def tick_shard(topo_stack, state_stack):
+            topo_l = _squeeze0(topo_stack)
+            s = _squeeze0(state_stack)
+            backend = self.make_exchange(topo_l)
+            for _ in range(steps_per_tick):
+                s = execute_superstep(self.local, topo_l.part, s, backend)
+            if s.lane_active is not None:
+                la = jax.lax.pmax(s.lane_active.astype(jnp.int32),
+                                  self.axes) > 0
+                s = dataclasses.replace(s, lane_active=la)
+            return _unsqueeze0(s)
+
+        sharded = shard_map(tick_shard, mesh=self.mesh,
+                            in_specs=(spec_leading, spec_leading),
+                            out_specs=spec_leading)
+        return jax.jit(sharded)
 
     # ------------------------------------------------------------------- run
     def make_run(self, ag: AgentGraph, max_steps: int = 100):
@@ -284,12 +360,7 @@ class DistGREEngine:
         if self._auto_plan_pending:
             self._resolve_auto_plan(ag)
         spec_leading = P(self.axes if len(self.axes) > 1 else self.axes[0])
-
-        def squeeze0(tree):
-            return jax.tree.map(lambda a: a[0] if hasattr(a, "ndim") and a.ndim > 0 else a, tree)
-
-        def unsqueeze0(tree):
-            return jax.tree.map(lambda a: a[None] if hasattr(a, "ndim") else a, tree)
+        squeeze0, unsqueeze0 = _squeeze0, _unsqueeze0
 
         def glob_any(s):
             any_active = jnp.any(s.active_scatter)

@@ -139,12 +139,25 @@ class DevicePartition:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class EngineState:
-    """Runtime vertex states (paper §6.1.3), flat column arrays per slot."""
+    """Runtime vertex states (paper §6.1.3), flat column arrays per slot.
+
+    `lane_active` is the OPTIONAL per-payload-lane halt tracker ([D] bool,
+    None outside serving): today's global halt runs the batch until the
+    SLOWEST lane converges, but multi-source programs exposing
+    `VertexProgram.lane_activates` get per-lane improvement reduced into
+    this field by `apply` each superstep — a False entry means that lane's
+    query reached its fixed point (monotone programs: quiet stays quiet)
+    and the serving layer (repro.serving.graph_scheduler) may retire it
+    and reseed the lane between supersteps.  Enabled via
+    `init_state(..., lane_tracking=True)`; None keeps the classic pytree
+    structure (zero cost, zero recompilation for non-serving runs).
+    """
 
     vertex_data: jnp.ndarray     # [num_masters, *V]
     scatter_data: jnp.ndarray    # [num_slots, *S] (agents hold forwarded copies)
     active_scatter: jnp.ndarray  # [num_slots] bool
     step: jnp.ndarray            # scalar int32 superstep counter
+    lane_active: Optional[jnp.ndarray] = None  # [D] bool, serving only
 
 
 class GREEngine:
@@ -322,11 +335,23 @@ class GREEngine:
         return hist
 
     # ------------------------------------------------------------------ init
-    def init_state(self, part: DevicePartition,
-                   source=None) -> EngineState:
+    def init_state(self, part: DevicePartition, source=None,
+                   lane_tracking: bool = False) -> EngineState:
         """`source` may be a single vertex id, or — for multi-source batched
         traversal programs with `payload_shape=(D,)` — a length-D sequence:
-        source d seeds payload lane d, so ONE pass answers D roots."""
+        source d seeds payload lane d, so ONE pass answers D roots.
+
+        Multi-source seeding is LANE-MASKED: entries that are None or
+        negative leave their lane unseeded (identity values, inactive) —
+        the serving layer starts with fewer queries than lanes and admits
+        into the free lanes later.  Seeding goes through the program's
+        `seed_sources` hook when it has one (PPR stages its first push);
+        the default is the traversal convention (0.0 at `[src, lane]`).
+
+        `lane_tracking=True` attaches the per-lane halt tracker
+        (`EngineState.lane_active`, seeded lanes start active); requires a
+        multi-source program exposing `lane_activates`.
+        """
         p = self.program
         n, s = part.num_masters, part.num_slots
         vertex_data = p.init_vertex_data(n, part.aux)
@@ -334,19 +359,39 @@ class GREEngine:
         scatter_data = jnp.full((s,) + sd0.shape[1:], p.monoid.identity,
                                 p.msg_dtype).at[:n].set(sd0)
         active = jnp.zeros(s, dtype=bool).at[:n].set(p.init_active(n, part.aux))
-        if source is not None:
+        lane_active = None
+        multi = source is not None and np.ndim(source) > 0
+        if source is not None and not multi:
             src_idx = jnp.asarray(source, jnp.int32)
-            if src_idx.ndim == 0:
-                vertex_data = vertex_data.at[src_idx].set(0.0)
-                scatter_data = scatter_data.at[src_idx].set(0.0)
-                active = jnp.zeros(s, dtype=bool).at[src_idx].set(True)
-            else:  # one source per payload lane
-                lanes = jnp.arange(src_idx.shape[0])
-                vertex_data = vertex_data.at[src_idx, lanes].set(0.0)
-                scatter_data = scatter_data.at[src_idx, lanes].set(0.0)
-                active = jnp.zeros(s, dtype=bool).at[src_idx].set(True)
+            vertex_data = vertex_data.at[src_idx].set(0.0)
+            scatter_data = scatter_data.at[src_idx].set(0.0)
+            active = jnp.zeros(s, dtype=bool).at[src_idx].set(True)
+        elif multi:  # one source per payload lane, None/-1 = lane unseeded
+            seeded = np.array([sv is not None and int(sv) >= 0
+                               for sv in source])
+            src_np = np.array([int(sv) if ok else s
+                               for sv, ok in zip(source, seeded)], np.int32)
+            src_idx = jnp.asarray(src_np)          # sentinel s drops
+            lanes = jnp.arange(src_idx.shape[0])
+            if p.seed_sources is not None:
+                vertex_data, scatter_data = p.seed_sources(
+                    vertex_data, scatter_data, src_idx, lanes, part.aux)
+            else:
+                vertex_data = vertex_data.at[src_idx, lanes].set(
+                    0.0, mode="drop")
+                scatter_data = scatter_data.at[src_idx, lanes].set(
+                    0.0, mode="drop")
+            active = jnp.zeros(s, dtype=bool).at[src_idx].set(
+                True, mode="drop")
+            if lane_tracking:
+                lane_active = jnp.asarray(seeded)
+        if lane_tracking and (lane_active is None
+                              or p.lane_activates is None):
+            raise ValueError("lane_tracking needs a multi-source (sequence) "
+                             "`source` and a program with `lane_activates` "
+                             "(payload_shape=(D,))")
         state = EngineState(vertex_data, scatter_data, active,
-                            jnp.zeros((), jnp.int32))
+                            jnp.zeros((), jnp.int32), lane_active)
         if self._auto_plan_pending:
             # plan="auto-tuned": the seeded state is the last eager point
             # before a jitted run trace fixes the static tile shapes, and
@@ -423,7 +468,15 @@ class GREEngine:
         else:        # iterative: activity is whatever apply asserts
             next_active = act_scatter
         active = jnp.zeros_like(state.active_scatter).at[:n].set(next_active)
-        return EngineState(vertex_data, scatter_data, active, state.step + 1)
+        # per-lane halt tracking (serving): reduce the program's per-lane
+        # improvement over the masters — lane d quiet this superstep means
+        # its query converged (monotone lanes cannot reawaken on their own)
+        lane_active = state.lane_active
+        if lane_active is not None and p.lane_activates is not None:
+            lane_active = jnp.any(p.lane_activates(state.vertex_data,
+                                                   combined_m), axis=0)
+        return EngineState(vertex_data, scatter_data, active, state.step + 1,
+                           lane_active)
 
     # ------------------------------------------------------------- superstep
     def superstep(self, part: DevicePartition, state: EngineState,
@@ -431,10 +484,13 @@ class GREEngine:
         """THE superstep: refresh → scatter-combine/reduce → apply.
 
         Single-shard and distributed execution differ only in `exchange`.
+        Delegates to the plan layer's phase-protocol form
+        (`plan.execute_superstep`) so a single eager superstep — the
+        serving tick — takes the same local_phase/merge path on every
+        backend, including the pipelined split tiles.
         """
-        state = exchange.refresh(state)
-        combined = exchange.reduce(self, part, state)
-        return self.apply(part, state, combined)
+        from repro.core.plan import execute_superstep
+        return execute_superstep(self, part, state, exchange)
 
     # -------------------------------------------------------------------- run
     @partial(jax.jit, static_argnums=(0, 3))

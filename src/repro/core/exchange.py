@@ -242,7 +242,8 @@ class _RefreshingExchange(_SyncPhase):
         sd, act = refresh_scatter_agents(self.topo, state.scatter_data,
                                          state.active_scatter, self.axes,
                                          dense=self.dense_frontier)
-        return EngineState(state.vertex_data, sd, act, state.step)
+        return EngineState(state.vertex_data, sd, act, state.step,
+                           state.lane_active)
 
 
 class AgentExchange(_RefreshingExchange):

@@ -212,6 +212,37 @@ class SuperstepPlan:
             kernel=self.kernel)
 
 
+def execute_superstep(engine: "GREEngine", part: "DevicePartition",
+                      state: "EngineState", exchange) -> "EngineState":
+    """ONE superstep through the phase protocol — the SERVING TICK.
+
+    The continuous-batching scheduler (repro.serving.graph_scheduler)
+    needs to stop BETWEEN supersteps, at static shape, to retire
+    converged payload lanes and admit queued queries into the freed
+    slots; `execute_plan`'s while-loop only stops at quiescence.  This is
+    the single-superstep cut of the same stage decomposition:
+    refresh → local_phase → merge → apply, for every backend.
+
+    Sync backends are op-for-op `refresh → reduce → apply`.  For the
+    pipelined backend the flush collective still overlaps the local-tile
+    combine INSIDE the tick (that is the overlap window), but the merge
+    is not deferred across ticks: a carried Mailbox would hold partial
+    combines of a lane's RETIRED query at the moment the scheduler
+    reseeds it, corrupting the admitted query — per-tick merge keeps the
+    lane-recycling invariant (every ⊕ fold visible to a lane happened
+    before the lane was reseeded) at the cost of the one-superstep
+    deferral, and stays bitwise ⊕-equivalent to the deferred loop.
+
+    Per-lane halt rides the state: when `EngineState.lane_active` is
+    attached, `apply` refreshes it from the program's `lane_activates`,
+    so after each tick the scheduler reads exactly which lanes still
+    improve (False = that lane's query converged).
+    """
+    state = exchange.refresh(state)
+    carry = exchange.local_phase(engine, part, state)
+    return engine.apply(part, state, exchange.merge(carry))
+
+
 def execute_plan(engine: "GREEngine", part: "DevicePartition",
                  state: "EngineState", exchange,
                  max_steps: int = 100, any_active=None) -> "EngineState":

@@ -155,3 +155,27 @@ class VertexProgram:
     # Brandes σ, batched multi-source BFS).
     payload_shape: Tuple[int, ...] = ()
     msg_dtype: Any = jnp.float32
+    # ------------------------------------------------------------ lane hooks
+    # Multi-source programs treat the D payload lanes as independent queries
+    # (one root per lane).  The three optional hooks below make lanes
+    # individually observable and reseedable — the substrate of the serving
+    # layer's lane recycling (repro.serving.graph_scheduler):
+    #
+    # `lane_activates(old_vertex_data, combined) -> bool[n, D]`: per-LANE
+    # analogue of `combine_activates` — which (vertex, lane) pairs improved
+    # this superstep.  The engine reduces `any` over vertices into
+    # `EngineState.lane_active`; a lane with no improvement anywhere has
+    # converged (monotone programs: a quiet lane stays quiet).
+    lane_activates: Optional[Callable[[jnp.ndarray, jnp.ndarray],
+                                      jnp.ndarray]] = None
+    # `seed_sources(vertex_data, scatter_data, src, lanes, aux)` seeds root
+    # `src[i]` into payload lane `lanes[i]` and returns the updated
+    # `(vertex_data, scatter_data)`.  `src`/`lanes` are int32 arrays with
+    # OUT-OF-BOUNDS sentinels marking no-op entries (use
+    # `.set(..., mode="drop")`), so admission stays one static-shape jitted
+    # call.  None = the traversal default (`value 0.0` at `[src, lane]`).
+    seed_sources: Optional[Callable] = None
+    # `lane_view(vertex_data, lane) -> [n]`: extract lane `lane`'s per-vertex
+    # result (default: column `vertex_data[:, lane]`; PPR stores (p, r)
+    # pairs and views the estimate).
+    lane_view: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None

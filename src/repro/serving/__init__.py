@@ -1,1 +1,22 @@
-from repro.serving.scheduler import ContinuousBatcher, Request
+"""Serving layer: graph-query continuous batching + LM continuous batching.
+
+The graph side (`graph_scheduler`) depends only on the core engine and is
+imported eagerly.  The LM `ContinuousBatcher` pulls in the transformer
+stack (`repro.models`), which not every deployment ships — those names are
+resolved lazily on first attribute access so `import repro.serving` works
+without the models extras.
+"""
+from repro.serving.graph_scheduler import (GraphQueryBatcher, Query,
+                                           ServingFrontend, poisson_ticks)
+
+__all__ = ["GraphQueryBatcher", "Query", "ServingFrontend", "poisson_ticks",
+           "ContinuousBatcher", "Request"]
+
+_LM_EXPORTS = ("ContinuousBatcher", "Request")
+
+
+def __getattr__(name):
+    if name in _LM_EXPORTS:
+        from repro.serving import scheduler
+        return getattr(scheduler, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

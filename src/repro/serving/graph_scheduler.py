@@ -1,0 +1,450 @@
+"""Multi-tenant traversal serving: continuous query batching over payload
+lanes (docs/serving.md).
+
+The engine's multi-source programs already answer D roots in one pass by
+batching them into the `[slots, D]` payload lanes — but a STATIC batch runs
+until its slowest query converges, so mixed short/long traffic pays the
+worst lane's supersteps for every admission.  `GraphQueryBatcher` turns the
+lanes into a continuously-batched serving pool instead:
+
+  admit   — a queued query is seeded into a free lane by ONE jitted
+            static-shape call (`[D]`-wide index arrays with out-of-bounds
+            sentinels, `mode="drop"`), so admission never recompiles;
+  tick    — `steps_per_tick` supersteps advance ALL resident lanes through
+            the one canonical superstep (`plan.execute_superstep`, any
+            exchange backend, single-shard or mesh);
+  retire  — between ticks the host reads `EngineState.lane_active` (per-lane
+            halt, reduced by `apply` from `VertexProgram.lane_activates`),
+            fetches converged lanes' results, and recycles their lanes for
+            the next queued queries.  Budget-exceeded queries are EVICTED:
+            the lane is reset without reseeding and the query marked failed.
+
+Recycling is bitwise-safe: a reset lane holds monoid-identity scatter state,
+so vertices still active on behalf of OTHER lanes deliver identity values
+into it (`min(x, inf) = x`; `x + 0.0 = x`) — a recycled lane's answer is
+bit-identical to a fresh single-query batch (tests/test_serving.py proves
+this on the null, agent, and pipelined backends).
+
+The jitted tick and admit functions see ONE pytree structure (lane_active
+always `[D]` bool, index operands always `[D]` int32), so an arbitrarily
+long query stream triggers exactly two compilations, total.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GraphQueryBatcher", "Query", "ServingFrontend", "poisson_ticks"]
+
+
+@dataclasses.dataclass
+class Query:
+    """One traversal request riding a payload lane.
+
+    Lifecycle: queued → running → done | evicted.  Timing fields are wall
+    clock (`time.perf_counter`); `supersteps_used` counts supersteps from
+    admission — the scheduler-level SLO latency that is independent of
+    machine speed.
+    """
+
+    uid: int
+    source: int
+    kind: str = "bfs"
+    max_supersteps: Optional[int] = None   # budget; None = run to convergence
+    status: str = "queued"
+    result: Optional[np.ndarray] = None
+    lane: Optional[int] = None
+    submitted_at: float = 0.0
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
+    supersteps_used: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def wait_s(self) -> float:
+        return self.admitted_at - self.submitted_at
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return float(sorted_vals[i])
+
+
+def poisson_ticks(num_queries: int, rate_per_tick: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Arrival tick for each of `num_queries` queries under a Poisson
+    process with `rate_per_tick` expected arrivals per serving tick
+    (exponential inter-arrival gaps, cumulated and floored)."""
+    gaps = rng.exponential(scale=1.0 / rate_per_tick, size=num_queries)
+    return np.floor(np.cumsum(gaps)).astype(np.int64)
+
+
+class GraphQueryBatcher:
+    """Continuous batching of traversal queries over one engine's lanes.
+
+    `engine` is a `GREEngine` (with a `DevicePartition` target) or a
+    `DistGREEngine` (with an `AgentGraph` target); the program must be a
+    multi-source variant exposing `lane_activates` (e.g.
+    `bfs_program(D)`, `sssp_program(D)`, `ppr_push_program(D)`).
+
+    Public protocol: `submit()` enqueues; `pump()` retires/evicts/admits
+    (host-side, between ticks); `tick()` advances every resident lane by
+    `steps_per_tick` supersteps; `run()` loops pump/tick until drained.
+    """
+
+    def __init__(self, engine, target, *, steps_per_tick: int = 1,
+                 default_budget: Optional[int] = None,
+                 clock=time.perf_counter):
+        p = engine.program
+        if not p.payload_shape or p.lane_activates is None:
+            raise ValueError(
+                "serving needs a multi-source program with lane_activates "
+                f"(got {p.name!r} with payload_shape={p.payload_shape})")
+        self.engine = engine
+        self.program = p
+        self.num_lanes = p.payload_shape[0]
+        self.steps_per_tick = steps_per_tick
+        self.default_budget = default_budget
+        self.clock = clock
+        self._dist = hasattr(engine, "mesh")   # DistGREEngine
+        if self._dist:
+            self._ag = target
+            self._topo = engine.device_topology(target)
+            self._tick_fn = engine.make_superstep(
+                target, steps_per_tick=steps_per_tick)
+            self._admit_fn = self._make_dist_admit(target)
+            self.state = engine.init_state(
+                target, source=[None] * self.num_lanes, lane_tracking=True)
+        else:
+            self._part = target
+            self._tick_fn = self._make_tick(target)
+            self._admit_fn = self._make_admit(target)
+            self.state = engine.init_state(
+                target, source=[None] * self.num_lanes, lane_tracking=True)
+        self.queue: deque = deque()
+        self.finished: List[Query] = []
+        self._lane_query: List[Optional[Query]] = [None] * self.num_lanes
+        self._uid = 0
+        self.ticks = 0
+        self.supersteps = 0
+        self._busy_lane_ticks = 0
+        self._first_submit: Optional[float] = None
+
+    # ------------------------------------------------------------ jitted fns
+    def _make_tick(self, part):
+        engine, steps = self.engine, self.steps_per_tick
+
+        def tick(state):
+            for _ in range(steps):
+                state = engine.superstep(part, state)
+            return state
+
+        return jax.jit(tick)
+
+    def _make_admit(self, part):
+        """ONE static-shape admission/eviction/reset call.
+
+        Operands are `[D]`-wide: `lanes[i]` names the lane to reset (sentinel
+        D = no-op), `src[i]` the root to seed into it (sentinel `num_slots`
+        = reset WITHOUT seeding, i.e. eviction), `flags[i]` the lane's new
+        `lane_active` bit.  Sentinels are out-of-bounds-HIGH so
+        `mode="drop"` discards them (negative indices would wrap).
+        """
+        p, D = self.program, self.num_lanes
+        n, slots = part.num_masters, part.num_slots
+        identity = p.monoid.identity
+
+        def admit(state, src, lanes, flags):
+            mask = jnp.zeros(D, dtype=bool).at[lanes].set(True, mode="drop")
+            init_vd = p.init_vertex_data(n, part.aux)
+            vd = state.vertex_data
+            bmask = mask.reshape((1, D) + (1,) * (vd.ndim - 2))
+            vd = jnp.where(bmask, init_vd, vd)
+            sd0 = jnp.asarray(p.init_scatter_data(n, part.aux), p.msg_dtype)
+            sd_init = jnp.full((slots,) + sd0.shape[1:], identity,
+                               p.msg_dtype).at[:n].set(sd0)
+            sd = jnp.where(mask[None, :], sd_init, state.scatter_data)
+            # Activating the seed vertex makes it scatter EVERY lane of its
+            # row next superstep.  An inactive vertex's row is stale — its
+            # values were already delivered (sum monoids would double-count
+            # them) — so normalize it to the identity; an ACTIVE vertex's
+            # row was rewritten by the last apply and is still undelivered,
+            # so it must be kept.
+            rows = jnp.take(sd, src, axis=0, mode="fill",
+                            fill_value=identity)
+            keep = jnp.take(state.active_scatter, src, mode="fill",
+                            fill_value=False)
+            rows = jnp.where(keep.reshape((D,) + (1,) * (rows.ndim - 1)),
+                             rows, identity)
+            sd = sd.at[src].set(rows, mode="drop")
+            if p.seed_sources is not None:
+                vd, sd = p.seed_sources(vd, sd, src, lanes, part.aux)
+            else:
+                vd = vd.at[src, lanes].set(0.0, mode="drop")
+                sd = sd.at[src, lanes].set(0.0, mode="drop")
+            active = state.active_scatter.at[src].set(True, mode="drop")
+            lane_active = state.lane_active.at[lanes].set(flags, mode="drop")
+            return dataclasses.replace(
+                state, vertex_data=vd, scatter_data=sd,
+                active_scatter=active, lane_active=lane_active)
+
+        return jax.jit(admit)
+
+    def _make_dist_admit(self, ag):
+        """Distributed admission: same contract, stacked `[k, ...]` state.
+
+        `src` here is `[k, D]` — a seeded lane's root appears as a LOCAL
+        slot on exactly the shard that masters it (sentinel `num_slots`
+        everywhere else), so the vmapped per-shard body is identical to the
+        single-shard one.  `lane_active` stays replicated: row 0 is updated
+        and broadcast.
+        """
+        p, D = self.program, self.num_lanes
+        cap, slots = ag.cap, ag.num_slots
+        identity = p.monoid.identity
+        aux = {"out_degree": jnp.asarray(ag.out_degree),
+               "global_id": jnp.asarray(
+                   ag.new2old.reshape(ag.k, cap).astype(np.float32))}
+
+        def one_shard(vd, sd, act, aux_i, src_i, lanes, mask):
+            init_vd = p.init_vertex_data(cap, aux_i)
+            bmask = mask.reshape((1, D) + (1,) * (vd.ndim - 2))
+            vd = jnp.where(bmask, init_vd, vd)
+            sd0 = jnp.asarray(p.init_scatter_data(cap, aux_i), p.msg_dtype)
+            sd_init = jnp.full((slots,) + sd0.shape[1:], identity,
+                               p.msg_dtype).at[:cap].set(sd0)
+            sd = jnp.where(mask[None, :], sd_init, sd)
+            # same stale-row normalization as the single-shard admit (an
+            # inactive seed vertex's row was already delivered)
+            rows = jnp.take(sd, src_i, axis=0, mode="fill",
+                            fill_value=identity)
+            keep = jnp.take(act, src_i, mode="fill", fill_value=False)
+            rows = jnp.where(keep.reshape((D,) + (1,) * (rows.ndim - 1)),
+                             rows, identity)
+            sd = sd.at[src_i].set(rows, mode="drop")
+            if p.seed_sources is not None:
+                vd, sd = p.seed_sources(vd, sd, src_i, lanes, aux_i)
+            else:
+                vd = vd.at[src_i, lanes].set(0.0, mode="drop")
+                sd = sd.at[src_i, lanes].set(0.0, mode="drop")
+            act = act.at[src_i].set(True, mode="drop")
+            return vd, sd, act
+
+        def admit(state, src, lanes, flags):
+            mask = jnp.zeros(D, dtype=bool).at[lanes].set(True, mode="drop")
+            vd, sd, act = jax.vmap(
+                lambda v, s, a, x, si: one_shard(v, s, a, x, si, lanes, mask)
+            )(state.vertex_data, state.scatter_data, state.active_scatter,
+              aux, src)
+            row = state.lane_active[0].at[lanes].set(flags, mode="drop")
+            la = jnp.broadcast_to(row[None, :], state.lane_active.shape)
+            return dataclasses.replace(
+                state, vertex_data=vd, scatter_data=sd, active_scatter=act,
+                lane_active=la)
+
+        return jax.jit(admit)
+
+    # --------------------------------------------------------------- serving
+    def submit(self, source: int, *, kind: Optional[str] = None,
+               max_supersteps: Optional[int] = None) -> Query:
+        q = Query(uid=self._uid, source=int(source),
+                  kind=kind or self.program.name,
+                  max_supersteps=(max_supersteps if max_supersteps is not None
+                                  else self.default_budget),
+                  submitted_at=self.clock())
+        self._uid += 1
+        if self._first_submit is None:
+            self._first_submit = q.submitted_at
+        self.queue.append(q)
+        return q
+
+    @property
+    def busy(self) -> bool:
+        return any(q is not None for q in self._lane_query)
+
+    @property
+    def idle(self) -> bool:
+        return not self.busy and not self.queue
+
+    def _lane_active_host(self) -> np.ndarray:
+        la = np.asarray(jax.device_get(self.state.lane_active))
+        return la[0] if la.ndim == 2 else la
+
+    def _vertex_data_host(self) -> np.ndarray:
+        vd = np.asarray(jax.device_get(self.state.vertex_data))
+        if not self._dist:
+            return vd
+        ag = self._ag
+        flat = vd.reshape(ag.k * ag.cap, *vd.shape[2:])
+        return flat[ag.old2new]   # back to ORIGINAL vertex order
+
+    def _lane_result(self, vd_host: np.ndarray, lane: int) -> np.ndarray:
+        if self.program.lane_view is not None:
+            return np.asarray(self.program.lane_view(vd_host, lane))
+        return vd_host[:, lane].copy()
+
+    def pump(self) -> List[Query]:
+        """Retire converged lanes, evict over-budget ones, admit from the
+        queue — host-side, between ticks; ends with at most ONE jitted
+        static-shape admit call covering every lane transition."""
+        D = self.num_lanes
+        finished: List[Query] = []
+        la = self._lane_active_host()
+        vd_host = None
+        ops: Dict[int, int] = {}   # lane -> src (sentinel = reset only)
+        sentinel_src = (self._ag.num_slots if self._dist
+                        else self._part.num_slots)
+        now = self.clock()
+        for d in range(D):
+            q = self._lane_query[d]
+            if q is None:
+                continue
+            if not la[d]:            # converged: fetch result, free the lane
+                if vd_host is None:
+                    vd_host = self._vertex_data_host()
+                q.result = self._lane_result(vd_host, d)
+                q.status, q.finished_at = "done", now
+                finished.append(q)
+                self._lane_query[d] = None
+            elif (q.max_supersteps is not None
+                  and q.supersteps_used >= q.max_supersteps):
+                q.status, q.finished_at = "evicted", now   # budget exceeded
+                finished.append(q)
+                self._lane_query[d] = None
+                ops[d] = sentinel_src        # reset the lane, seed nothing
+        for d in range(D):
+            if self._lane_query[d] is None and self.queue:
+                q = self.queue.popleft()
+                q.status, q.lane, q.admitted_at = "running", d, now
+                q.supersteps_used = 0
+                self._lane_query[d] = q
+                ops[d] = self._local_src(q.source)   # admit overrides evict
+        if ops:
+            lanes = np.full(D, D, np.int32)          # sentinel lane = D
+            flags = np.zeros(D, dtype=bool)
+            src = (np.full((self._ag.k, D), sentinel_src, np.int32)
+                   if self._dist else np.full(D, sentinel_src, np.int32))
+            for i, (d, s) in enumerate(ops.items()):
+                lanes[i] = d
+                if isinstance(s, tuple):             # dist admit: seed on
+                    shard, slot = s                  # the mastering shard
+                    src[shard, i] = slot
+                    flags[i] = True
+                elif s != sentinel_src:              # single-shard admit
+                    src[i] = s
+                    flags[i] = True
+            self.state = self._admit_fn(self.state, jnp.asarray(src),
+                                        jnp.asarray(lanes),
+                                        jnp.asarray(flags))
+        self.finished.extend(finished)
+        return finished
+
+    def _local_src(self, source: int):
+        """Original vertex id → admit-operand encoding: the local slot
+        (single shard) or a (shard, local_slot) pair (distributed)."""
+        if not self._dist:
+            return int(source)
+        g = int(self._ag.old2new[int(source)])
+        return (g // self._ag.cap, g % self._ag.cap)
+
+    def tick(self) -> None:
+        """Advance every resident lane by `steps_per_tick` supersteps."""
+        self._busy_lane_ticks += sum(
+            q is not None for q in self._lane_query)
+        if self._dist:
+            self.state = self._tick_fn(self._topo, self.state)
+        else:
+            self.state = self._tick_fn(self.state)
+        self.ticks += 1
+        self.supersteps += self.steps_per_tick
+        for q in self._lane_query:
+            if q is not None:
+                q.supersteps_used += self.steps_per_tick
+
+    def run(self, max_ticks: int = 100_000) -> List[Query]:
+        """Pump/tick until queue and lanes drain; returns queries finished
+        during this call (done or evicted), in completion order."""
+        out = list(self.pump())
+        while self.busy and self.ticks < max_ticks:
+            self.tick()
+            out.extend(self.pump())
+        return out
+
+    # --------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, float]:
+        """SLO metrics over everything finished so far (docs/serving.md)."""
+        done = [q for q in self.finished if q.status == "done"]
+        lat = sorted(q.latency_s for q in done)
+        steps = sorted(float(q.supersteps_used) for q in done)
+        waits = [q.wait_s for q in done]
+        span = (max(q.finished_at for q in done) - self._first_submit
+                if done and self._first_submit is not None else 0.0)
+        cap = self.ticks * self.num_lanes
+        return {
+            "queries_done": float(len(done)),
+            "queries_evicted": float(
+                sum(q.status == "evicted" for q in self.finished)),
+            "ticks": float(self.ticks),
+            "supersteps": float(self.supersteps),
+            "lane_occupancy": self._busy_lane_ticks / cap if cap else 0.0,
+            "qps": len(done) / span if span > 0 else float("nan"),
+            "latency_p50_s": _percentile(lat, 0.50),
+            "latency_p95_s": _percentile(lat, 0.95),
+            "latency_mean_s": float(np.mean(lat)) if lat else float("nan"),
+            "queue_wait_mean_s": (float(np.mean(waits)) if waits
+                                  else float("nan")),
+            "supersteps_p50": _percentile(steps, 0.50),
+            "supersteps_p95": _percentile(steps, 0.95),
+        }
+
+
+class ServingFrontend:
+    """Routes a mixed-kind query stream to per-kind batchers.
+
+    Payload lanes batch queries of ONE program, so a deployment serving
+    BFS + SSSP + PPR runs one `GraphQueryBatcher` per kind; the frontend
+    owns submission routing and a fair round-robin tick loop (each busy
+    batcher advances one tick per round)."""
+
+    def __init__(self, batchers: Dict[str, GraphQueryBatcher]):
+        self.batchers = batchers
+
+    def submit(self, kind: str, source: int, **kw) -> Query:
+        return self.batchers[kind].submit(source, kind=kind, **kw)
+
+    @property
+    def idle(self) -> bool:
+        return all(b.idle for b in self.batchers.values())
+
+    def step(self) -> List[Query]:
+        """One round: pump every batcher, tick the busy ones."""
+        out: List[Query] = []
+        for b in self.batchers.values():
+            out.extend(b.pump())
+            if b.busy:
+                b.tick()
+        return out
+
+    def run(self, max_rounds: int = 100_000) -> List[Query]:
+        out: List[Query] = []
+        for _ in range(max_rounds):
+            out.extend(self.step())
+            if self.idle:
+                break
+        for b in self.batchers.values():
+            out.extend(b.pump())
+        return out
+
+    def metrics(self) -> Dict[str, Dict[str, float]]:
+        return {kind: b.metrics() for kind, b in self.batchers.items()}

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from pathlib import Path
 from typing import Dict, Optional
 
@@ -55,10 +56,18 @@ class PlanCache:
                 with open(self.path) as f:
                     data = json.load(f)
                 if data.get("version") != CACHE_VERSION:
-                    raise ValueError(
+                    # A foreign-version file (e.g. a CI cache restored
+                    # across a schema bump) degrades to an EMPTY cache:
+                    # every lookup misses, the engine keeps its defaults /
+                    # runs a fresh search, and the next `store` rewrites
+                    # the file at the current version.  Serving stacks
+                    # must not crash on a stale artifact.
+                    warnings.warn(
                         f"plan cache {self.path}: version "
-                        f"{data.get('version')!r} != {CACHE_VERSION} — "
-                        "regenerate with repro.tuning.search")
+                        f"{data.get('version')!r} != {CACHE_VERSION}; "
+                        "ignoring stale entries (fresh search fallback)",
+                        stacklevel=3)
+                    data = {"version": CACHE_VERSION, "entries": {}}
                 self._data = data
             else:
                 self._data = {"version": CACHE_VERSION, "entries": {}}

@@ -114,3 +114,31 @@ def test_no_noise_falls_back_to_uniform_threshold(tmp_path):
     cur = _write(tmp_path / "cur.json", {**BASE, "b": BASE["b"] * 1.4})
     assert compare.main([base, cur]) == 0
     assert compare.main([base, cur, "--threshold", "1.3"]) == 1
+
+
+def test_only_prefix_subsets_both_files(tmp_path):
+    """--only gates just the selected slice: a current run producing only
+    serving_* entries passes against a full baseline (no missing-entry
+    failure for the rest), and a regression INSIDE the slice still fails."""
+    base = _write(tmp_path / "base.json",
+                  {**BASE, "serving_x": 50000.0, "serving_y": 60000.0})
+    cur_ok = _write(tmp_path / "cur.json",
+                    {"serving_x": 50000.0, "serving_y": 60000.0})
+    assert compare.main([base, cur_ok, "--only", "serving_"]) == 0
+    cur_bad = _write(tmp_path / "cur2.json",
+                     {"serving_x": 50000.0, "serving_y": 600000.0})
+    assert compare.main([base, cur_bad, "--only", "serving_"]) == 1
+
+
+def test_skip_prefix_excludes_from_missing_check(tmp_path):
+    """--skip removes a slice from both files: the main bench job can gate
+    everything EXCEPT serving_* without the serving entries (absent from
+    its artifact) counting as missing — but a skipped slice present and
+    regressed stays invisible too (the serving job owns that gate)."""
+    base = _write(tmp_path / "base.json", {**BASE, "serving_x": 50000.0})
+    cur = _write(tmp_path / "cur.json", BASE)          # no serving_x
+    assert compare.main([base, cur]) == 1              # missing w/o --skip
+    assert compare.main([base, cur, "--skip", "serving_"]) == 0
+    cur_reg = _write(tmp_path / "cur2.json",
+                     {**BASE, "serving_x": 500000.0})
+    assert compare.main([base, cur_reg, "--skip", "serving_"]) == 0

@@ -55,3 +55,194 @@ def test_scheduler_more_requests_than_slots(model):
     sched.run()
     assert all(r.done for r in reqs)
     assert all(len(r.out) == 3 for r in reqs)
+
+
+# ---------------- graph serving: continuous batching over payload lanes ----
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.core import algorithms
+from repro.core.agent_graph import build_agent_graph
+from repro.core.dist_engine import DistGREEngine
+from repro.core.engine import DevicePartition, GREEngine
+from repro.core.partition import greedy_partition
+from repro.graph.generators import circulant_graph, rmat_edges
+from repro.serving import GraphQueryBatcher, ServingFrontend, poisson_ticks
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+D = 4
+GRAPH_BACKENDS = ("null", "agent", "pipelined")
+
+
+@pytest.fixture(scope="module")
+def rmat():
+    return rmat_edges(scale=8, edge_factor=6, seed=3, weights=True).dedup()
+
+
+def _graph_batcher(backend, program, g, **kw):
+    """Serving stack on one of the three in-process backends: the
+    single-shard engine, or the 1-device mesh with the sync / pipelined
+    Agent-Graph exchanges (the same surfaces the conformance matrix
+    locks down)."""
+    if backend == "null":
+        eng = GREEngine(program, **kw)
+        return GraphQueryBatcher(eng, DevicePartition.from_graph(g))
+    ag = build_agent_graph(g, greedy_partition(g, 1, batch_size=64), 1)
+    mesh = jax.make_mesh((1,), ("graph",))
+    eng = DistGREEngine(program, mesh, ("graph",), exchange=backend, **kw)
+    return GraphQueryBatcher(eng, ag)
+
+
+def _fix(x):
+    return np.nan_to_num(x, posinf=-1.0)
+
+
+def test_lazy_import_without_models():
+    """`import repro.serving` must not drag in the transformer stack —
+    the graph scheduler serves without the models extras (the LM batcher
+    resolves lazily on attribute access)."""
+    code = (
+        "import sys; import repro.serving\n"
+        "assert 'repro.models.transformer' not in sys.modules, 'eager LM'\n"
+        "assert repro.serving.GraphQueryBatcher is not None\n"
+        "from repro.serving import ContinuousBatcher\n"
+        "assert 'repro.models.transformer' in sys.modules\n"
+    )
+    subprocess.run([sys.executable, "-c", code], check=True,
+                   env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                        "JAX_PLATFORMS": "cpu"})
+
+
+def test_lane_masked_seeding(rmat):
+    """None entries leave their lanes unseeded: identity state, inactive
+    halt bit — the admission substrate."""
+    eng = GREEngine(algorithms.bfs_program(D))
+    part = DevicePartition.from_graph(rmat)
+    st = eng.init_state(part, source=[5, None, None, 9], lane_tracking=True)
+    vd = np.asarray(st.vertex_data)
+    assert vd[5, 0] == 0.0 and vd[9, 3] == 0.0
+    assert np.all(np.isinf(vd[:, 1])) and np.all(np.isinf(vd[:, 2]))
+    assert np.asarray(st.lane_active).tolist() == [True, False, False, True]
+
+
+@pytest.mark.parametrize("backend", GRAPH_BACKENDS)
+def test_recycled_lane_bitwise_equals_fresh(backend, rmat):
+    """THE recycling invariant: a query answered in a recycled lane (with
+    unrelated queries running in neighbor lanes) is bit-identical to the
+    same query served alone in a fresh batcher."""
+    sources = [0, 3, 17, 42, 99, 7, 55, 123]
+    b = _graph_batcher(backend, algorithms.bfs_program(D), rmat)
+    for s in sources:
+        b.submit(s)
+    done = b.run()
+    assert [q.status for q in done] == ["done"] * len(sources)
+    assert len({q.uid for q in done}) == len(sources)
+    for q in done:
+        fresh = _graph_batcher(backend, algorithms.bfs_program(D), rmat)
+        fresh.submit(q.source)
+        (ref,) = fresh.run()
+        assert np.array_equal(_fix(ref.result), _fix(q.result)), q.uid
+
+
+@pytest.mark.parametrize("backend", GRAPH_BACKENDS)
+def test_unconverged_lane_never_retired(backend):
+    """Per-lane halt must not fire early: a long-diameter BFS (circulant
+    ring) retires only after >= eccentricity supersteps, with the full
+    correct depth map."""
+    n = 128
+    g = circulant_graph(n, degree=2, weights=True, seed=0)
+    b = _graph_batcher(backend, algorithms.bfs_program(D), g)
+    q = b.submit(0)
+    b.run()
+    assert q.status == "done"
+    depths = _fix(q.result)
+    # ring of ±1 and ±2 offsets: depth grows to ~n/4; the lane must have
+    # stayed resident for at least the graph's eccentricity many supersteps
+    ecc = int(depths.max())
+    assert ecc > 10
+    assert q.supersteps_used >= ecc
+    fresh = _graph_batcher(backend, algorithms.bfs_program(D), g)
+    fresh.submit(0)
+    (ref,) = fresh.run()
+    assert np.array_equal(_fix(ref.result), depths)
+
+
+@pytest.mark.parametrize("backend", GRAPH_BACKENDS)
+def test_budget_eviction_keeps_neighbors_intact(backend):
+    """A query that exhausts its superstep budget is marked evicted (no
+    result) and its lane reset — WITHOUT corrupting queries running in
+    the other lanes."""
+    n = 128
+    g = circulant_graph(n, degree=2, weights=True, seed=0)
+    b = _graph_batcher(backend, algorithms.bfs_program(D), g)
+    victims = [b.submit(s) for s in (0, 31)]
+    doomed = b.submit(64, max_supersteps=3)      # ring ecc >> 3
+    late = b.submit(97)                          # recycles the evicted lane
+    b.run()
+    assert doomed.status == "evicted" and doomed.result is None
+    for q in victims + [late]:
+        assert q.status == "done"
+        fresh = _graph_batcher(backend, algorithms.bfs_program(D), g)
+        fresh.submit(q.source)
+        (ref,) = fresh.run()
+        assert np.array_equal(_fix(ref.result), _fix(q.result)), q.uid
+
+
+def test_ppr_recycling_bitwise(rmat):
+    """The sum-monoid traversal: forward-push PPR lanes recycle bitwise
+    too (the admit path normalizes stale scatter rows — a re-activated
+    vertex must not re-deliver already-delivered residual shares)."""
+    prog = algorithms.ppr_push_program(D)
+    b = _graph_batcher("null", prog, rmat, frontier="dense")
+    sources = [0, 3, 17, 42, 99, 8]
+    for s in sources:
+        b.submit(s)
+    done = b.run()
+    assert [q.status for q in done] == ["done"] * len(sources)
+    for q in done:
+        fresh = _graph_batcher("null", prog, rmat, frontier="dense")
+        fresh.submit(q.source)
+        (ref,) = fresh.run()
+        assert np.array_equal(ref.result, q.result), q.uid
+        assert ref.result[q.source] > 0
+
+
+def test_serving_never_recompiles(rmat):
+    """The whole point of sentinel-indexed admission: a long stream with
+    many admissions/retirements compiles the tick and the admit exactly
+    once each."""
+    b = _graph_batcher("null", algorithms.bfs_program(D), rmat)
+    rng = np.random.default_rng(0)
+    for s in rng.integers(0, rmat.num_vertices, size=16):
+        b.submit(int(s))
+    done = b.run()
+    assert len(done) == 16
+    for fn in (b._tick_fn, b._admit_fn):
+        if hasattr(fn, "_cache_size"):
+            assert fn._cache_size() == 1
+
+
+def test_metrics_and_frontend(rmat):
+    """SLO metrics are populated and a mixed-kind frontend drains both
+    batchers."""
+    bfs = _graph_batcher("null", algorithms.bfs_program(D), rmat)
+    ppr = _graph_batcher("null", algorithms.ppr_push_program(D), rmat,
+                         frontier="dense")
+    fe = ServingFrontend({"bfs": bfs, "ppr": ppr})
+    rng = np.random.default_rng(1)
+    ticks = poisson_ticks(10, rate_per_tick=2.0, rng=rng)
+    assert (np.diff(ticks) >= 0).all()
+    for i in range(10):
+        fe.submit("bfs" if i % 2 else "ppr",
+                  int(rng.integers(0, rmat.num_vertices)))
+    done = fe.run()
+    assert len(done) == 10 and all(q.status == "done" for q in done)
+    m = fe.metrics()
+    for kind in ("bfs", "ppr"):
+        mm = m[kind]
+        assert mm["queries_done"] == 5.0
+        assert 0.0 < mm["lane_occupancy"] <= 1.0
+        assert mm["latency_p95_s"] >= mm["latency_p50_s"] >= 0.0
+        assert mm["supersteps_p50"] >= 1.0
+        assert np.isfinite(mm["qps"]) and mm["qps"] > 0

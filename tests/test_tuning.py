@@ -139,11 +139,21 @@ def test_program_and_mesh_facets_split_keys(scenario):
 
 
 # ------------------------------------------------------------- plan cache
-def test_cache_rejects_foreign_version(tmp_path):
+def test_cache_foreign_version_falls_back_clean(tmp_path):
+    """A version-drifted cache file (e.g. a CI artifact restored across a
+    schema bump) must degrade to an empty cache — lookups miss (fresh
+    search fallback), and the next store rewrites at the current version —
+    rather than crash the consumer."""
     path = tmp_path / "plans.json"
-    path.write_text(json.dumps({"version": 99, "entries": {}}))
-    with pytest.raises(ValueError, match="version"):
-        PlanCache(path).lookup("k")
+    path.write_text(json.dumps(
+        {"version": 99, "entries": {"k": {"plan": {"bogus": 1}}}}))
+    cache = PlanCache(path)
+    with pytest.warns(UserWarning, match="version"):
+        assert cache.lookup("k") is None          # stale entry ignored
+    cache.store("k2", SuperstepPlan(strategy="flat", frontier_cap=16))
+    reread = json.loads(path.read_text())
+    assert reread["version"] == 1                 # rewritten at current
+    assert list(reread["entries"]) == ["k2"]
 
 
 def test_cache_store_merges_concurrent_writers(tmp_path):
