@@ -15,10 +15,10 @@ import platform
 import sys
 
 from benchmarks import (bench_exchange_overlap, bench_frontier,
-                        bench_gas_vs_sc, bench_memory, bench_pagerank,
-                        bench_partition, bench_serving, bench_traversal,
-                        bench_tuning, bench_vector_combine, bench_weak,
-                        common)
+                        bench_gas_vs_sc, bench_incremental, bench_memory,
+                        bench_pagerank, bench_partition, bench_serving,
+                        bench_traversal, bench_tuning, bench_vector_combine,
+                        bench_weak, common)
 
 SUITES = {
     "pagerank": bench_pagerank.main,     # Table 5 / Fig. 8a-b
@@ -35,6 +35,7 @@ SUITES = {
     # --smoke --json ...` gated with `compare.py --only serving_`); the full
     # suite runs it at full scale here
     "serving": bench_serving.main,       # continuous batching vs re-init
+    "incremental": bench_incremental.main,  # warm start vs cold restart
 }
 
 # Reduced-scale configs for the CI smoke run (seconds, not minutes); suites
@@ -55,6 +56,10 @@ SMOKE = {
     # but the ~3ms BA runs still need a wide median on 2-core hosts
     "tuning": lambda: (bench_tuning.run(scale=11, iters=3),
                        bench_tuning.run_powerlaw(scale=10, iters=7)),
+    # the >= 3x edge-scan payoff floor is asserted inside the bench
+    "incremental": lambda: (bench_incremental.run(scale=10, iters=3),
+                            bench_incremental.run_circulant(scale=10,
+                                                            iters=3)),
 }
 
 

@@ -29,7 +29,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.partition import assign_owners, rebalance_owners
-from repro.graph.structures import Graph, csr_layout, degree_buckets
+from repro.graph.structures import (DeltaReport, Graph, csr_layout,
+                                    degree_buckets, removal_selector)
 
 
 @dataclasses.dataclass
@@ -220,6 +221,244 @@ def split_edge_tiles(ag: AgentGraph, pad_multiple: int = 8) -> EdgeTileSplit:
 
     return EdgeTileSplit(remote=remote, local=local,
                          remote_fraction=n_remote / max(n_real, 1))
+
+
+def slot_to_original(ag: AgentGraph) -> np.ndarray:
+    """Recover, per partition, each local slot's ORIGINAL vertex id
+    (`[k, num_slots]` int64; -1 for padding/sink slots).
+
+    Masters come straight from `new2old`; agent slots are recovered from
+    the positional exchange pairs — `scat_recv_slot[i, j, p]` (agent slot
+    on i) is paired with `scat_send_master[j, i, p]` (master slot on j),
+    and `comb_send_slot[i, j, p]` with `comb_recv_master[j, i, p]`.  This
+    is the inverse the delta-ingress pass needs to match mutations
+    (expressed in original ids) against a built AgentGraph's edges.
+    """
+    k, cap, sink = ag.k, ag.cap, ag.sink
+    out = np.full((k, ag.num_slots), -1, dtype=np.int64)
+    for i in range(k):
+        out[i, :cap] = ag.new2old[i * cap:(i + 1) * cap]
+        for j in range(k):
+            slots = ag.scat_recv_slot[i, j]
+            t = slots != sink
+            g = j * cap + ag.scat_send_master[j, i][t]
+            out[i, slots[t]] = ag.new2old[g]
+            slots = ag.comb_send_slot[i, j]
+            t = slots != sink
+            g = j * cap + ag.comb_recv_master[j, i][t]
+            out[i, slots[t]] = ag.new2old[g]
+    return out
+
+
+def apply_edge_delta(ag: AgentGraph, delta, pad_multiple: int = 8):
+    """Delta ingress on a built AgentGraph (docs/incremental.md): retire and
+    append edges WITHOUT repartitioning — master placement (`old2new`),
+    `cap`, and every live slot's meaning are preserved, so a warm-started
+    `EngineState` remains directly valid on the mutated topology.
+
+    Fast path (slack-consuming, no shape change):
+
+      * removals tombstone in place — `edge_mask` goes False and the edge
+        is repointed at the sink;
+      * adds land on `owner(dst)` (the destination is always a LOCAL
+        master there, so the split-tile invariant "every real dst is a
+        master or combiner" holds by construction), reusing an existing
+        scatter agent for a remote src or allocating a fresh one from the
+        `s_pad` slack (with its positional exchange pair appended);
+      * each touched partition's live edges re-sort by destination slot
+        and the CSR/bucket indices rebuild; static facets merge
+        monotonically (elementwise max) so the shard_map trace survives.
+
+    When any pad would overflow (`e_pad` edges, `s_pad` agents, `s_x_pad`
+    exchange slots), the graph COMPACTS instead: rebuilt from the
+    recovered edge set through `build_agent_graph` with the SAME owner
+    vector — `old2new` is bit-identical (the relabeling is a
+    deterministic lexsort of the unchanged owner assignment), only the
+    pads regrow.  That is the one recompile point, flagged in the report.
+
+    Returns ``(new_ag, DeltaReport)``; `ag` is not mutated.
+    """
+    V, k, cap, sink = ag.num_vertices, ag.k, ag.cap, ag.sink
+    if delta.num_adds:
+        hi = int(max(delta.add_src.max(), delta.add_dst.max()))
+        assert hi < V, (hi, V)
+        for name in ag.edge_props:
+            if name not in delta.add_props:
+                raise KeyError(f"delta adds missing edge prop {name!r}")
+    s2o = slot_to_original(ag)
+    owner = (ag.old2new // cap).astype(np.int64)
+
+    # ---- removals: match (src, dst) pairs in original-id space
+    keep = ag.edge_mask.copy()
+    removed_src, removed_dst = [], []
+    for i in range(k):
+        o_s = s2o[i][ag.src[i]]
+        o_d = s2o[i][ag.dst[i]]
+        # masked rows read -1 (negative key) and can never match
+        rem = removal_selector(o_s, o_d, delta.rem_src, delta.rem_dst,
+                               V) & ag.edge_mask[i]
+        keep[i] = ag.edge_mask[i] & ~rem
+        removed_src.append(o_s[rem])
+        removed_dst.append(o_d[rem])
+    removed_src = (np.concatenate(removed_src) if removed_src
+                   else np.zeros(0, np.int64))
+    removed_dst = (np.concatenate(removed_dst) if removed_dst
+                   else np.zeros(0, np.int64))
+
+    # ---- stage adds on owner(dst); allocate scatter agents as needed
+    agent_of = []              # per partition: original id -> agent slot
+    for i in range(k):
+        agent_of.append({int(s2o[i, s]): s
+                         for s in range(cap, cap + int(ag.num_scatter[i]))})
+    scat_used = np.array([[int(np.sum(ag.scat_recv_slot[i, j] != sink))
+                           for j in range(k)] for i in range(k)])
+    num_scatter = ag.num_scatter.copy()
+    scat_appends = []          # (i, j, agent_slot_on_i, master_loc_on_j, pos)
+    add_rows = [[] for _ in range(k)]   # (s_loc, d_loc, delta_row)
+    overflow = False
+    for t in range(delta.num_adds):
+        u, v = int(delta.add_src[t]), int(delta.add_dst[t])
+        i = int(owner[v])
+        d_loc = int(ag.old2new[v] - i * cap)
+        j = int(owner[u])
+        if j == i:
+            s_loc = int(ag.old2new[u] - i * cap)
+        else:
+            s_loc = agent_of[i].get(u)
+            if s_loc is None:
+                if (int(num_scatter[i]) >= ag.s_pad
+                        or scat_used[i, j] >= ag.s_x_pad):
+                    overflow = True
+                    break
+                s_loc = cap + int(num_scatter[i])
+                agent_of[i][u] = s_loc
+                scat_appends.append((i, j, s_loc,
+                                     int(ag.old2new[u] - j * cap),
+                                     int(scat_used[i, j])))
+                scat_used[i, j] += 1
+                num_scatter[i] += 1
+        add_rows[i].append((s_loc, d_loc, t))
+    if not overflow:
+        overflow = any(int(np.sum(keep[i])) + len(add_rows[i]) > ag.e_pad
+                       for i in range(k))
+    if overflow:
+        return _rebuild_with_delta(ag, delta, pad_multiple)
+
+    # ---- commit: tombstone + append + per-partition dst re-sort
+    src = np.full_like(ag.src, sink)
+    dst = np.full_like(ag.dst, sink)
+    edge_mask = np.zeros_like(ag.edge_mask)
+    eprops = {name: np.zeros_like(v) for name, v in ag.edge_props.items()}
+    num_edges = np.zeros(k, dtype=np.int64)
+    num_slots = ag.num_slots
+    csr_indptr = np.zeros_like(ag.csr_indptr)
+    csr_eidx = np.zeros_like(ag.csr_eidx)
+    csr_max_deg = ag.csr_max_deg          # monotone: max with old statics
+    bucket_id = np.full_like(ag.bucket_id, -1)
+    bucket_sizes, bucket_max_deg = (), ()
+    for i in range(k):
+        ksel = np.flatnonzero(keep[i])
+        rows = add_rows[i]
+        s_all = np.concatenate([ag.src[i][ksel],
+                                np.array([r[0] for r in rows], np.int32)])
+        d_all = np.concatenate([ag.dst[i][ksel],
+                                np.array([r[1] for r in rows], np.int32)])
+        tsel = np.array([r[2] for r in rows], np.int64)
+        props = {name: np.concatenate(
+                     [v[i][ksel],
+                      np.asarray(delta.add_props[name], v.dtype)[tsel]
+                      if rows else v[i][:0]])
+                 for name, v in ag.edge_props.items()}
+        eorder = np.argsort(d_all, kind="stable")
+        n_e = int(s_all.shape[0])
+        num_edges[i] = n_e
+        src[i, :n_e] = s_all[eorder]
+        dst[i, :n_e] = d_all[eorder]
+        edge_mask[i, :n_e] = True
+        for name, v in props.items():
+            eprops[name][i, :n_e] = v[eorder]
+        csr_indptr[i], csr_eidx[i], deg = csr_layout(src[i], edge_mask[i],
+                                                     num_slots)
+        csr_max_deg = max(csr_max_deg, deg)
+        bucket_id[i], sizes, max_degs = degree_buckets(csr_indptr[i],
+                                                       num_slots)
+        bucket_sizes = _merge_bucket_stats(bucket_sizes, sizes)
+        bucket_max_deg = _merge_bucket_stats(bucket_max_deg, max_degs)
+    bucket_sizes = _merge_bucket_stats(bucket_sizes, ag.bucket_sizes)
+    bucket_max_deg = _merge_bucket_stats(bucket_max_deg, ag.bucket_max_deg)
+
+    scat_recv = ag.scat_recv_slot.copy()
+    scat_send = ag.scat_send_master.copy()
+    for i, j, slot, master_loc, pos in scat_appends:
+        scat_recv[i, j, pos] = slot
+        scat_send[j, i, pos] = master_loc
+
+    # global out-degree aux: adjust masters by the delta's degree change
+    d_out = (np.bincount(delta.add_src, minlength=V)
+             - np.bincount(removed_src, minlength=V)).astype(np.float32)
+    out_degree = ag.out_degree.copy()
+    for i in range(k):
+        own_old = ag.new2old[i * cap:(i + 1) * cap]
+        valid = own_old >= 0
+        out_degree[i, valid] += d_out[own_old[valid]]
+
+    new_ag = dataclasses.replace(
+        ag, src=src, dst=dst, edge_mask=edge_mask, edge_props=eprops,
+        out_degree=out_degree, scat_recv_slot=scat_recv,
+        scat_send_master=scat_send, num_scatter=num_scatter,
+        num_edges=num_edges, csr_indptr=csr_indptr, csr_eidx=csr_eidx,
+        csr_max_deg=csr_max_deg, bucket_id=bucket_id,
+        bucket_sizes=bucket_sizes, bucket_max_deg=bucket_max_deg)
+    report = DeltaReport(added_src=delta.add_src.copy(),
+                         added_dst=delta.add_dst.copy(),
+                         removed_src=removed_src, removed_dst=removed_dst,
+                         compacted=False)
+    return new_ag, report
+
+
+def _rebuild_with_delta(ag: AgentGraph, delta, pad_multiple: int):
+    """Slack exhausted: recover the live edge set (original ids + their
+    partition assignment), apply the delta at the COO level, and rebuild
+    through `build_agent_graph` with the same owner vector — master
+    placement and `old2new` are preserved; only agent/edge pads regrow."""
+    V, k, cap = ag.num_vertices, ag.k, ag.cap
+    s2o = slot_to_original(ag)
+    srcs, dsts, parts = [], [], []
+    props = {name: [] for name in ag.edge_props}
+    removed_src, removed_dst = [], []
+    for i in range(k):
+        m = ag.edge_mask[i]
+        o_s = s2o[i][ag.src[i]][m]
+        o_d = s2o[i][ag.dst[i]][m]
+        rem = removal_selector(o_s, o_d, delta.rem_src, delta.rem_dst, V)
+        srcs.append(o_s[~rem])
+        dsts.append(o_d[~rem])
+        parts.append(np.full(int((~rem).sum()), i, np.int64))
+        removed_src.append(o_s[rem])
+        removed_dst.append(o_d[rem])
+        for name, v in ag.edge_props.items():
+            props[name].append(v[i][m][~rem])
+    owner = (ag.old2new // cap).astype(np.int64)
+    srcs.append(delta.add_src)
+    dsts.append(delta.add_dst)
+    parts.append(owner[delta.add_dst])
+    for name in props:
+        col = (np.asarray(delta.add_props[name],
+                          ag.edge_props[name].dtype)
+               if delta.num_adds else props[name][0][:0])
+        props[name].append(col)
+    graph = Graph(V, np.concatenate(srcs), np.concatenate(dsts),
+                  {name: np.concatenate(v) for name, v in props.items()})
+    new_ag = build_agent_graph(graph, np.concatenate(parts), k,
+                               owner=owner, pad_multiple=pad_multiple)
+    assert np.array_equal(new_ag.old2new, ag.old2new), \
+        "compaction must preserve master placement"
+    report = DeltaReport(added_src=delta.add_src.copy(),
+                         added_dst=delta.add_dst.copy(),
+                         removed_src=np.concatenate(removed_src),
+                         removed_dst=np.concatenate(removed_dst),
+                         compacted=True)
+    return new_ag, report
 
 
 def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,

@@ -76,7 +76,7 @@ def sssp_program(num_sources: Optional[int] = None) -> VertexProgram:
         init_scatter_data=lambda n, aux: jnp.full(shape(n), jnp.inf, jnp.float32),
         init_active=lambda n, aux: jnp.zeros(n, dtype=bool),  # source set via engine
         combine_activates=combine_activates,
-        halts=True, needs_edge_prop="weight",
+        halts=True, needs_edge_prop="weight", invalidation="path",
         payload_shape=() if D is None else (D,),
         # per-lane improvement = the min-fold actually lowering a distance;
         # a lane with no improvement anywhere has converged (label
@@ -116,7 +116,11 @@ def cc_program() -> VertexProgram:
         init_vertex_data=init_labels,
         init_scatter_data=init_labels,
         init_active=lambda n, aux: jnp.ones(n, dtype=bool),
+        # label propagation's support is CYCLIC (a split-off component's
+        # stale labels certify each other), so removals invalidate by
+        # forward reachability, not the path worklist (repro.core.incremental)
         combine_activates=combine_activates, halts=True,
+        invalidation="component",
     )
 
 
@@ -147,6 +151,7 @@ def bfs_program(num_sources: Optional[int] = None) -> VertexProgram:
         init_scatter_data=lambda n, aux: jnp.full(shape(n), jnp.inf, jnp.float32),
         init_active=lambda n, aux: jnp.zeros(n, dtype=bool),
         combine_activates=combine_activates, halts=True,
+        invalidation="path",
         payload_shape=() if D is None else (D,),
         lane_activates=None if D is None else (lambda vd, c: c < vd),
     )

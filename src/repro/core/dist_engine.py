@@ -320,6 +320,101 @@ class DistGREEngine:
         return EngineState(vd, sd, act, jnp.zeros((k,), jnp.int32),
                            lane_active)
 
+    # ------------------------------------------------------------ incremental
+    def warm_start_state(self, ag: AgentGraph, prev_state: EngineState,
+                         report, source=None, lane_tracking: bool = False):
+        """Distributed warm start (see `GREEngine.warm_start_state`): the
+        invalidation/seeding passes run host-side in ORIGINAL vertex order
+        — `old2new` maps master rows out of the stacked `[k, cap, ...]`
+        state and back — so the policy logic (repro.core.incremental) is
+        shared verbatim with the single-shard engine.  `ag` is the
+        MUTATED agent graph (`agent_graph.apply_edge_delta` preserves
+        master placement, so `prev_state`'s rows line up)."""
+        from repro.core import incremental
+        from repro.core.agent_graph import slot_to_original
+        p = self.program
+        incremental.check_supported(p, report)
+        k, cap, V = ag.k, ag.cap, ag.num_vertices
+        state0 = self.init_state(ag, source=source,
+                                 lane_tracking=lane_tracking)
+        if not p.halts:
+            return dataclasses.replace(
+                state0,
+                vertex_data=prev_state.vertex_data,
+                scatter_data=state0.scatter_data.at[:, :cap].set(
+                    prev_state.scatter_data[:, :cap]))
+
+        def to_orig(stacked):   # [k, cap, ...] master rows -> [V, ...]
+            a = np.asarray(stacked)
+            return a.reshape((k * cap,) + a.shape[2:])[ag.old2new]
+
+        vd_prev = to_orig(prev_state.vertex_data)
+        sd_prev = to_orig(np.asarray(prev_state.scatter_data)[:, :cap])
+        s2o = slot_to_original(ag)
+        lsrc, ldst, lprop = [], [], []
+        for i in range(k):
+            m = ag.edge_mask[i]
+            lsrc.append(s2o[i][ag.src[i]][m])
+            ldst.append(s2o[i][ag.dst[i]][m])
+            if p.needs_edge_prop:
+                lprop.append(ag.edge_props[p.needs_edge_prop][i][m])
+        lsrc = np.concatenate(lsrc)
+        ldst = np.concatenate(ldst)
+        eprop = np.concatenate(lprop) if p.needs_edge_prop else None
+        protected = incremental.source_mask(vd_prev.shape, source)
+        tainted = incremental.compute_taint(p, V, lsrc, ldst, eprop,
+                                            vd_prev, report, protected)
+        vd = np.where(tainted, to_orig(state0.vertex_data), vd_prev)
+        sd = np.where(tainted,
+                      to_orig(np.asarray(state0.scatter_data)[:, :cap]),
+                      sd_prev)
+        tany = tainted if tainted.ndim == 1 else tainted.any(axis=-1)
+        aux_orig = {
+            "out_degree": jnp.asarray(
+                np.asarray(ag.out_degree).reshape(k * cap)[ag.old2new]),
+            "global_id": jnp.arange(V, dtype=jnp.float32)}
+        init_act = np.asarray(p.init_active(V, aux_orig))
+        act = incremental.warm_seed_active(V, lsrc, ldst, tany,
+                                           report.added_src, init_act)
+        # scatter the original-order columns back into the stacked layout
+        vd_st = np.asarray(state0.vertex_data).reshape(
+            (k * cap,) + vd.shape[1:]).copy()
+        vd_st[ag.old2new] = vd
+        vd_st = vd_st.reshape((k, cap) + vd.shape[1:])
+        sd_full = np.asarray(state0.scatter_data).copy()
+        sd_flat = sd_full[:, :cap].reshape((k * cap,) + sd.shape[1:]).copy()
+        sd_flat[ag.old2new] = sd
+        sd_full[:, :cap] = sd_flat.reshape((k, cap) + sd.shape[1:])
+        act_flat = np.zeros(k * cap, dtype=bool)
+        act_flat[ag.old2new] = act
+        act_st = np.zeros((k, ag.num_slots), dtype=bool)
+        act_st[:, :cap] = act_flat.reshape(k, cap)
+        return dataclasses.replace(
+            state0,
+            vertex_data=jnp.asarray(vd_st, vd_prev.dtype),
+            scatter_data=jnp.asarray(sd_full, p.msg_dtype),
+            active_scatter=jnp.asarray(act_st))
+
+    def rerun_incremental(self, ag: AgentGraph, prev_state: EngineState,
+                          delta, *, source=None, max_steps: int = 100):
+        """Apply an EdgeDelta to the agent graph and re-converge the mesh
+        run from `prev_state`'s fixed point.  Returns
+        ``(new_ag, result_in_original_order, final_state, report)`` —
+        bitwise-equal to a cold `run` on the mutated graph for halting
+        min-monoid programs (tests/test_conformance.py)."""
+        from repro.core.agent_graph import apply_edge_delta
+        new_ag, report = apply_edge_delta(ag, delta)
+        state = self.warm_start_state(new_ag, prev_state, report,
+                                      source=source)
+        topo = self.device_topology(new_ag)
+        fn = self.make_run(new_ag, max_steps=max_steps)
+        out = jax.device_get(fn(topo, state))
+        vd = np.asarray(out.vertex_data).reshape(
+            (new_ag.k * new_ag.cap,) + out.vertex_data.shape[2:])
+        result = np.empty((new_ag.num_vertices,) + vd.shape[1:], vd.dtype)
+        result[:] = vd[new_ag.old2new]
+        return new_ag, result, out, report
+
     # ------------------------------------------------------------------ tick
     def make_superstep(self, ag: AgentGraph, steps_per_tick: int = 1):
         """Build the jitted SERVING TICK: `steps_per_tick` supersteps over

@@ -92,7 +92,8 @@ class DevicePartition:
     @staticmethod
     def from_graph(graph, pad_to: Optional[int] = None,
                    sort_by_dst: bool = True, transpose: bool = False,
-                   bucket_bounds: Optional[tuple] = None):
+                   bucket_bounds: Optional[tuple] = None,
+                   edge_slack: int = 0):
         """Whole graph on one shard (no agents; slots = V + sink).
 
         `transpose=True` builds the partition of the reversed graph — the
@@ -104,6 +105,11 @@ class DevicePartition:
         (repro.tuning) probes candidate ladders by rebuilding the
         partition per bounds, and a tuned `SuperstepPlan` carrying
         non-None `bucket_bounds` expects a partition built with them.
+
+        `edge_slack` pads the edge columns with that many extra masked
+        slots so future `apply_edge_delta` batches can append in place
+        without regrowing the static edge length (= without an XLA
+        retrace).  See docs/incremental.md.
         """
         from repro.graph.structures import (DEFAULT_BUCKET_BOUNDS,
                                             csr_layout, degree_buckets,
@@ -114,7 +120,7 @@ class DevicePartition:
         if sort_by_dst:
             src, dst, props, _ = sort_edges_by_dst(src, dst, props)
         v = graph.num_vertices
-        e_pad = pad_to or graph.num_edges
+        e_pad = pad_to or (graph.num_edges + edge_slack)
         psrc, pdst, mask = pad_edges(src, dst, e_pad, pad_vertex=v)
         props = {k: np.pad(p, (0, e_pad - graph.num_edges)) for k, p in props.items()}
         out_deg = graph.out_degree().astype(np.float32)
@@ -134,6 +140,118 @@ class DevicePartition:
             bucket_id=jnp.asarray(bucket_id), bucket_sizes=sizes,
             bucket_max_deg=max_degs,
         )
+
+    def apply_edge_delta(self, delta, bucket_bounds: Optional[tuple] = None,
+                         pad_multiple: int = 8):
+        """Delta ingress (docs/incremental.md): retire + append edges in the
+        padded columns without rebuilding the partition from a Graph.
+
+        Removed edges become TOMBSTONES — folded into `edge_mask` as False
+        and repointed at the sink slot (`src = dst = num_masters`), so even
+        the dense-frontier scan (which skips the mask, relying on the sink's
+        identity-pinned scatter row) never re-delivers them.  Added edges
+        consume masked slack slots at the tail.  Live edges are then
+        re-sorted by destination on the host, preserving the
+        `edges_sorted_by_dst` contract of the segment combine, and the
+        CSR/bucket secondary indices are rebuilt over the same padded
+        length.
+
+        The STATIC facets (`csr_max_deg`, `bucket_sizes`, `bucket_max_deg`)
+        merge monotonically (elementwise max with the previous partition):
+        larger tile caps are pure padding, and keeping them monotone means a
+        sequence of small deltas reuses one jitted trace instead of
+        recompiling per batch.  Only when the live edge count outgrows the
+        padded columns do we COMPACT: regrow the edge length with ×1.25
+        headroom (rounded up to `pad_multiple`) — the one recompile point,
+        flagged in the report.
+
+        Returns ``(new_partition, DeltaReport)``; `self` is not mutated.
+        """
+        from repro.graph.structures import (DEFAULT_BUCKET_BOUNDS,
+                                            DeltaReport, csr_layout,
+                                            degree_buckets, removal_selector,
+                                            sort_edges_by_dst)
+        assert self.src is not None, \
+            "tile-only partition carries no edge columns to mutate"
+        n, slots = self.num_masters, self.num_slots
+        sink = n  # single-shard layout: masters [0, n), sink at n
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        mask = np.asarray(self.edge_mask)
+        props = {k: np.asarray(v) for k, v in self.edge_props.items()}
+        # ---- retire: every live instance of each removed (src, dst) pair
+        rem = removal_selector(src.astype(np.int64), dst.astype(np.int64),
+                               delta.rem_src, delta.rem_dst, slots) & mask
+        removed_src = src[rem].astype(np.int64)
+        removed_dst = dst[rem].astype(np.int64)
+        keep = mask & ~rem
+        # ---- validate + stage adds
+        if delta.num_adds:
+            hi = int(max(delta.add_src.max(), delta.add_dst.max()))
+            assert hi < n, (hi, n)
+            for k in props:
+                if k not in delta.add_props:
+                    raise KeyError(f"delta adds missing edge prop {k!r}")
+        live_src = np.concatenate([src[keep],
+                                   delta.add_src.astype(np.int32)])
+        live_dst = np.concatenate([dst[keep],
+                                   delta.add_dst.astype(np.int32)])
+        live_props = {
+            k: np.concatenate([v[keep],
+                               np.asarray(delta.add_props[k], v.dtype)
+                               if delta.num_adds else v[:0]])
+            for k, v in props.items()}
+        e_live = int(live_src.shape[0])
+        e_pad = int(src.shape[0])
+        compacted = False
+        if e_live > e_pad:  # slack exhausted: the one recompile point
+            e_pad = max(e_live, int(e_pad * 1.25))
+            e_pad = -(-e_pad // pad_multiple) * pad_multiple
+            compacted = True
+        if self.edges_sorted_by_dst:
+            live_src, live_dst, live_props, _ = sort_edges_by_dst(
+                live_src, live_dst, live_props)
+        psrc = np.full(e_pad, sink, np.int32)
+        pdst = np.full(e_pad, sink, np.int32)
+        pmask = np.zeros(e_pad, dtype=bool)
+        psrc[:e_live] = live_src
+        pdst[:e_live] = live_dst
+        pmask[:e_live] = True
+        pprops = {}
+        for k, v in live_props.items():
+            col = np.zeros((e_pad,) + v.shape[1:], dtype=v.dtype)
+            col[:e_live] = v
+            pprops[k] = col
+        indptr, eidx, max_deg = csr_layout(psrc, pmask, slots)
+        bucket_id, sizes, max_degs = degree_buckets(
+            indptr, slots,
+            bounds=tuple(bucket_bounds or DEFAULT_BUCKET_BOUNDS))
+        # monotone static merge (see docstring): max keeps traces stable
+        max_deg = max(max_deg, self.csr_max_deg)
+        if len(sizes) == len(self.bucket_sizes):
+            sizes = tuple(max(a, b)
+                          for a, b in zip(sizes, self.bucket_sizes))
+            max_degs = tuple(max(a, b)
+                             for a, b in zip(max_degs, self.bucket_max_deg))
+        out_deg = np.bincount(live_src, minlength=slots)[:n]
+        aux = dict(self.aux)
+        aux["out_degree"] = jnp.asarray(out_deg.astype(np.float32))
+        new = dataclasses.replace(
+            self,
+            src=jnp.asarray(psrc), dst=jnp.asarray(pdst),
+            edge_mask=jnp.asarray(pmask),
+            edge_props={k: jnp.asarray(v) for k, v in pprops.items()},
+            aux=aux,
+            csr_indptr=jnp.asarray(indptr), csr_eidx=jnp.asarray(eidx),
+            csr_max_deg=max_deg,
+            bucket_id=jnp.asarray(bucket_id), bucket_sizes=sizes,
+            bucket_max_deg=max_degs)
+        report = DeltaReport(added_src=delta.add_src.copy(),
+                             added_dst=delta.add_dst.copy(),
+                             removed_src=removed_src,
+                             removed_dst=removed_dst,
+                             compacted=compacted)
+        return new, report
 
 
 @jax.tree_util.register_dataclass
@@ -229,6 +347,10 @@ class GREEngine:
         self.frontier_hist = None   # set by calibrate_frontier_cap
         self._plan_cache = plan_cache
         self._auto_plan_pending = False
+        # last consulted tuned-plan cache key + its frontier-hist facet —
+        # `refresh_plan` re-keys against these after a graph mutation
+        self._plan_key = None
+        self._plan_hist = None
         if plan is None:
             pass
         elif plan == "auto-tuned":
@@ -266,9 +388,39 @@ class GREEngine:
         hist = self.probe_frontier_hist(part, state)
         key = plan_cache_key(part=part, program=self.program, mesh_size=1,
                              frontier_hist=hist)
+        self._plan_key, self._plan_hist = key, hist
         plan = cache.lookup(key)
         if plan is not None:
             self.adopt_plan(plan)
+
+    def refresh_plan(self, part: DevicePartition) -> bool:
+        """Re-key a consulted tuned plan after a graph mutation.
+
+        The fingerprint quantizes its facets (log2 edge counts, skew
+        bins), so a small `apply_edge_delta` is ABSORBED — same key, the
+        adopted plan stands and no retrace happens.  A large delta shifts
+        a bin: the stale key (the bug this fixes — plans tuned for the
+        pre-mutation graph silently governing the mutated one) is dropped,
+        the cache is consulted under the new key (hit = adopt, miss = keep
+        current knobs), and the new key becomes current.  Returns True
+        when the key changed.  No-op unless this engine ever consulted
+        the cache (`plan="auto-tuned"`).
+        """
+        if self._plan_key is None:
+            return False
+        from repro.tuning import PlanCache, plan_cache_key
+        key = plan_cache_key(part=part, program=self.program, mesh_size=1,
+                             frontier_hist=self._plan_hist)
+        if key == self._plan_key:
+            return False
+        self._plan_key = key
+        cache = self._plan_cache
+        if not isinstance(cache, PlanCache):
+            cache = PlanCache(cache)
+        plan = cache.lookup(key)
+        if plan is not None:
+            self.adopt_plan(plan)
+        return True
 
     def make_plan(self, phases: str = "sync") -> SuperstepPlan:
         """The engine's SuperstepPlan (repro.core.plan): frontier strategy
@@ -398,6 +550,83 @@ class GREEngine:
             # the cache key's frontier-density facet needs it
             self._consult_plan_cache(part, state)
         return state
+
+    # ------------------------------------------------------------ incremental
+    def warm_start_state(self, part: DevicePartition, prev_state: EngineState,
+                         report, source=None, lane_tracking: bool = False
+                         ) -> EngineState:
+        """Seed a re-convergence run on the MUTATED partition from the
+        previous fixed point (repro.core.incremental; docs/incremental.md).
+
+        Iterative programs (PageRank) carry the previous values forward
+        under fresh init activity — the contraction resumes from a nearby
+        point.  Halting min-monoid traversals get the exact treatment:
+        entries no longer certified by the surviving edges are reset to
+        their initial values (the program's `invalidation` policy), and
+        only add-endpoints, in-neighbors of resets, and self-seeding
+        resets start active.  An empty delta yields an empty frontier —
+        the run terminates immediately at the previous fixed point.
+        """
+        from repro.core import incremental
+        p = self.program
+        incremental.check_supported(p, report)
+        n = part.num_masters
+        state0 = self.init_state(part, source=source,
+                                 lane_tracking=lane_tracking)
+        if not p.halts:
+            return dataclasses.replace(
+                state0,
+                vertex_data=prev_state.vertex_data,
+                scatter_data=state0.scatter_data.at[:n].set(
+                    prev_state.scatter_data[:n]))
+        vd_prev = np.asarray(prev_state.vertex_data)
+        sd_prev = np.asarray(prev_state.scatter_data)[:n]
+        src = np.asarray(part.src)
+        mask = np.asarray(part.edge_mask)
+        lsrc = src[mask].astype(np.int64)
+        ldst = np.asarray(part.dst)[mask].astype(np.int64)
+        eprop = None
+        if p.needs_edge_prop:
+            eprop = np.asarray(part.edge_props[p.needs_edge_prop])[mask]
+        protected = incremental.source_mask(vd_prev.shape, source)
+        tainted = incremental.compute_taint(p, n, lsrc, ldst, eprop,
+                                            vd_prev, report, protected)
+        vd = np.where(tainted, np.asarray(state0.vertex_data), vd_prev)
+        sd = np.where(tainted, np.asarray(state0.scatter_data)[:n], sd_prev)
+        tany = tainted if tainted.ndim == 1 else tainted.any(axis=-1)
+        init_act = np.asarray(p.init_active(n, part.aux))
+        act = incremental.warm_seed_active(n, lsrc, ldst, tany,
+                                           report.added_src, init_act)
+        active = jnp.zeros(part.num_slots, dtype=bool).at[:n].set(
+            jnp.asarray(act))
+        return dataclasses.replace(
+            state0,
+            vertex_data=jnp.asarray(vd, np.asarray(vd_prev).dtype),
+            scatter_data=state0.scatter_data.at[:n].set(
+                jnp.asarray(sd, p.msg_dtype)),
+            active_scatter=active)
+
+    def rerun_incremental(self, part: DevicePartition, prev_state: EngineState,
+                          delta, *, source=None, max_steps: int = 100,
+                          lane_tracking: bool = False):
+        """Apply an EdgeDelta and re-converge from `prev_state`'s fixed
+        point through the unchanged plan executor.
+
+        Returns ``(new_partition, final_state, report)``.  The final state
+        is bitwise-equal to a cold `run` on the mutated graph for halting
+        min-monoid programs (tests/test_conformance.py locks this down);
+        iterative programs re-converge to the same tolerance they always
+        carry.  Supersteps and edge scans are proportional to the
+        perturbation, not the graph (benchmarks/bench_incremental.py).
+        """
+        new_part, report = part.apply_edge_delta(
+            delta, bucket_bounds=self.bucket_bounds)
+        state = self.warm_start_state(new_part, prev_state, report,
+                                      source=source,
+                                      lane_tracking=lane_tracking)
+        self.refresh_plan(new_part)
+        out = self.run(new_part, state, max_steps)
+        return new_part, out, report
 
     # ------------------------------------------------------- scatter-combine
     def scatter_combine(self, part: DevicePartition, state: EngineState,

@@ -179,3 +179,13 @@ class VertexProgram:
     # result (default: column `vertex_data[:, lane]`; PPR stores (p, r)
     # pairs and views the estimate).
     lane_view: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
+    # ------------------------------------------------------------ incremental
+    # Removal-invalidation policy for warm-started re-convergence after an
+    # edge delta (repro.core.incremental):
+    #   "path"      — support-based worklist (strictly-increasing messages:
+    #                 BFS/SSSP);
+    #   "component" — forward-reachability reset (cyclic support: CC);
+    #   None        — removals are not incrementally recoverable (warm
+    #                 start over a delta with removals raises).
+    # Pure adds never need a policy (min re-delivery is idempotent).
+    invalidation: Optional[str] = None

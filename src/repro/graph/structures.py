@@ -56,6 +56,31 @@ class Graph:
         props = {k: np.concatenate([v, v]) for k, v in self.edge_props.items()}
         return Graph(self.num_vertices, src, dst, props, dict(self.vertex_props))
 
+    def apply_edge_delta(self, delta: "EdgeDelta") -> "Graph":
+        """The COO-level mutation (host-side reference semantics): retire
+        every live instance of each removed pair, then append the added
+        edges.  Partition-level deltas (`DevicePartition.apply_edge_delta`,
+        `agent_graph.apply_edge_delta`) must agree with rebuilding from
+        this graph — the mutation conformance suite checks exactly that.
+        """
+        rem = removal_selector(self.src, self.dst, delta.rem_src,
+                               delta.rem_dst, self.num_vertices)
+        keep = ~rem
+        for k in self.edge_props:
+            if k not in delta.add_props and delta.num_adds:
+                raise KeyError(f"delta adds missing edge prop {k!r}")
+        src = np.concatenate([self.src[keep], delta.add_src])
+        dst = np.concatenate([self.dst[keep], delta.add_dst])
+        props = {k: np.concatenate([v[keep],
+                                    np.asarray(delta.add_props[k], v.dtype)
+                                    if delta.num_adds else v[:0]])
+                 for k, v in self.edge_props.items()}
+        if delta.num_adds:
+            hi = int(max(delta.add_src.max(), delta.add_dst.max()))
+            assert hi < self.num_vertices, (hi, self.num_vertices)
+        return Graph(self.num_vertices, src, dst, props,
+                     dict(self.vertex_props))
+
     def dedup(self) -> "Graph":
         """Drop duplicate (src, dst) pairs and self loops."""
         keep = self.src != self.dst
@@ -65,6 +90,88 @@ class Graph:
         props = {k: v[sel] for k, v in self.edge_props.items()}
         return Graph(self.num_vertices, self.src[sel], self.dst[sel], props,
                      dict(self.vertex_props))
+
+
+@dataclasses.dataclass
+class EdgeDelta:
+    """A batch of edge mutations in ORIGINAL vertex ids (docs/incremental.md).
+
+    `removes` retire every live instance of each (src, dst) pair (pairs not
+    present are ignored); `adds` append unconditionally (multi-edges are
+    allowed, matching `Graph`'s COO semantics).  `add_props` must supply a
+    column for every edge property the target graph carries — zero-filling
+    a weight would silently create zero-cost edges.
+    """
+
+    add_src: np.ndarray = None
+    add_dst: np.ndarray = None
+    add_props: Dict[str, np.ndarray] = None
+    rem_src: np.ndarray = None
+    rem_dst: np.ndarray = None
+
+    def __post_init__(self):
+        def ids(a):
+            return (np.zeros(0, np.int64) if a is None
+                    else np.asarray(a, dtype=np.int64).reshape(-1))
+        self.add_src, self.add_dst = ids(self.add_src), ids(self.add_dst)
+        self.rem_src, self.rem_dst = ids(self.rem_src), ids(self.rem_dst)
+        assert self.add_src.shape == self.add_dst.shape
+        assert self.rem_src.shape == self.rem_dst.shape
+        self.add_props = {k: np.asarray(v)
+                          for k, v in (self.add_props or {}).items()}
+        for k, v in self.add_props.items():
+            assert v.shape[0] == self.num_adds, f"add prop {k} length"
+
+    @property
+    def num_adds(self) -> int:
+        return int(self.add_src.shape[0])
+
+    @property
+    def num_removes(self) -> int:
+        return int(self.rem_src.shape[0])
+
+
+@dataclasses.dataclass
+class DeltaReport:
+    """What an `apply_edge_delta` actually did, in ORIGINAL vertex ids.
+
+    The warm-start seeding rules (docs/incremental.md) consume this:
+    `added_src` endpoints are re-activated so new edges deliver, and
+    `removed_dst` endpoints seed the min-monoid invalidation pass.
+    `removed_*` list every retired live edge instance (a pair matching two
+    parallel edges appears twice); `compacted` flags that spare capacity
+    ran out and the static edge/agent shapes were rebuilt (the one case
+    where downstream jitted functions retrace).
+    """
+
+    added_src: np.ndarray
+    added_dst: np.ndarray
+    removed_src: np.ndarray
+    removed_dst: np.ndarray
+    compacted: bool = False
+
+    @property
+    def num_adds(self) -> int:
+        return int(self.added_src.shape[0])
+
+    @property
+    def num_removed(self) -> int:
+        return int(self.removed_src.shape[0])
+
+
+def removal_selector(src: np.ndarray, dst: np.ndarray, rem_src: np.ndarray,
+                     rem_dst: np.ndarray, id_space: int) -> np.ndarray:
+    """Boolean selector over (src, dst) rows matching any removed pair.
+
+    `id_space` must exceed every id in play (keys are `src * id_space +
+    dst`); callers pass original |V| or the local slot count.
+    """
+    if rem_src.shape[0] == 0 or src.shape[0] == 0:
+        return np.zeros(src.shape[0], dtype=bool)
+    n = np.int64(id_space)
+    keys = src.astype(np.int64) * n + dst.astype(np.int64)
+    rem_keys = rem_src.astype(np.int64) * n + rem_dst.astype(np.int64)
+    return np.isin(keys, rem_keys)
 
 
 @dataclasses.dataclass

@@ -135,6 +135,7 @@ class GraphQueryBatcher:
         self.queue: deque = deque()
         self.finished: List[Query] = []
         self._lane_query: List[Optional[Query]] = [None] * self.num_lanes
+        self._pending_deltas: List = []   # "finish"-policy deltas awaiting swap
         self._uid = 0
         self.ticks = 0
         self.supersteps = 0
@@ -295,9 +296,10 @@ class GraphQueryBatcher:
         return vd_host[:, lane].copy()
 
     def pump(self) -> List[Query]:
-        """Retire converged lanes, evict over-budget ones, admit from the
-        queue — host-side, between ticks; ends with at most ONE jitted
-        static-shape admit call covering every lane transition."""
+        """Retire converged lanes, evict over-budget ones, land any pending
+        graph delta once the lanes drain, admit from the queue — host-side,
+        between ticks; ends with at most ONE jitted static-shape admit call
+        covering every lane transition."""
         D = self.num_lanes
         finished: List[Query] = []
         la = self._lane_active_host()
@@ -323,7 +325,16 @@ class GraphQueryBatcher:
                 finished.append(q)
                 self._lane_query[d] = None
                 ops[d] = sentinel_src        # reset the lane, seed nothing
+        # "finish"-policy deltas land here: every resident lane has drained
+        # (their results above were fetched from the pre-delta snapshot),
+        # so the swap is between ticks by construction — never torn.  A
+        # still-pending delta holds admissions so it lands in bounded time.
+        if self._pending_deltas and not self.busy:
+            self._swap_target()
+            ops = {}   # stale resets target the replaced state; drop them
         for d in range(D):
+            if self._pending_deltas:
+                break                # hold admissions until the delta lands
             if self._lane_query[d] is None and self.queue:
                 q = self.queue.popleft()
                 q.status, q.lane, q.admitted_at = "running", d, now
@@ -331,24 +342,96 @@ class GraphQueryBatcher:
                 self._lane_query[d] = q
                 ops[d] = self._local_src(q.source)   # admit overrides evict
         if ops:
-            lanes = np.full(D, D, np.int32)          # sentinel lane = D
-            flags = np.zeros(D, dtype=bool)
-            src = (np.full((self._ag.k, D), sentinel_src, np.int32)
-                   if self._dist else np.full(D, sentinel_src, np.int32))
-            for i, (d, s) in enumerate(ops.items()):
-                lanes[i] = d
-                if isinstance(s, tuple):             # dist admit: seed on
-                    shard, slot = s                  # the mastering shard
-                    src[shard, i] = slot
-                    flags[i] = True
-                elif s != sentinel_src:              # single-shard admit
-                    src[i] = s
-                    flags[i] = True
-            self.state = self._admit_fn(self.state, jnp.asarray(src),
-                                        jnp.asarray(lanes),
-                                        jnp.asarray(flags))
+            self._apply_ops(ops)
         self.finished.extend(finished)
         return finished
+
+    def _apply_ops(self, ops: Dict[int, int]) -> None:
+        """ONE jitted admit call applying `lane -> src` transitions
+        (sentinel src = reset without seeding)."""
+        D = self.num_lanes
+        sentinel_src = (self._ag.num_slots if self._dist
+                        else self._part.num_slots)
+        lanes = np.full(D, D, np.int32)              # sentinel lane = D
+        flags = np.zeros(D, dtype=bool)
+        src = (np.full((self._ag.k, D), sentinel_src, np.int32)
+               if self._dist else np.full(D, sentinel_src, np.int32))
+        for i, (d, s) in enumerate(ops.items()):
+            lanes[i] = d
+            if isinstance(s, tuple):                 # dist admit: seed on
+                shard, slot = s                      # the mastering shard
+                src[shard, i] = slot
+                flags[i] = True
+            elif s != sentinel_src:                  # single-shard admit
+                src[i] = s
+                flags[i] = True
+        self.state = self._admit_fn(self.state, jnp.asarray(src),
+                                    jnp.asarray(lanes), jnp.asarray(flags))
+
+    # ------------------------------------------------------- graph mutation
+    def apply_delta(self, delta, *, policy: str = "finish") -> None:
+        """Land an `EdgeDelta` on a live batcher (docs/incremental.md).
+
+        Ticks are whole-state jitted calls over an immutable topology
+        snapshot, so a delta NEVER lands mid-tick — a torn read (a query
+        observing half the mutation) cannot exist by construction.  The
+        policy decides what happens to queries resident in lanes:
+
+          "finish" — residents run to completion on the pre-delta
+              snapshot; the swap happens at the first `pump()` after the
+              last resident drains.  Admissions are HELD while a delta is
+              pending, bounding the wait by the slowest resident.
+          "reseed" — the swap happens now; residents are re-seeded from
+              superstep 0 on the mutated graph in their lanes (fresh
+              init values, so no invalidation pass is needed — any
+              program the batcher can serve supports this).  Their
+              `supersteps_used` keeps accumulating toward the budget.
+
+        Either way, queries admitted after this call run on the mutated
+        graph, and recycled-lane results stay bitwise-equal to fresh runs
+        (tests/test_serving.py).
+        """
+        assert policy in ("finish", "reseed"), policy
+        self._pending_deltas.append(delta)
+        if policy == "finish":
+            if not self.busy:
+                self._swap_target()
+            return
+        residents = [(d, q) for d, q in enumerate(self._lane_query)
+                     if q is not None]
+        self._swap_target()
+        if residents:
+            self._apply_ops({d: self._local_src(q.source)
+                             for d, q in residents})
+
+    def _swap_target(self) -> None:
+        """Apply every pending delta to the topology and rebuild the jitted
+        tick/admit functions + a fresh lane state.  Callers guarantee no
+        lane holds a query whose state must survive (drained, or about to
+        be re-seeded)."""
+        deltas, self._pending_deltas = self._pending_deltas, []
+        if self._dist:
+            from repro.core.agent_graph import apply_edge_delta
+            for delta in deltas:
+                self._ag, _ = apply_edge_delta(self._ag, delta)
+            self._topo = self.engine.device_topology(self._ag)
+            self._tick_fn = self.engine.make_superstep(
+                self._ag, steps_per_tick=self.steps_per_tick)
+            self._admit_fn = self._make_dist_admit(self._ag)
+            self.state = self.engine.init_state(
+                self._ag, source=[None] * self.num_lanes,
+                lane_tracking=True)
+        else:
+            for delta in deltas:
+                self._part, _ = self._part.apply_edge_delta(delta)
+            # stale-PlanCache fix: a mutated partition re-keys the tuned
+            # plan before the new tick function traces
+            self.engine.refresh_plan(self._part)
+            self._tick_fn = self._make_tick(self._part)
+            self._admit_fn = self._make_admit(self._part)
+            self.state = self.engine.init_state(
+                self._part, source=[None] * self.num_lanes,
+                lane_tracking=True)
 
     def _local_src(self, source: int):
         """Original vertex id → admit-operand encoding: the local slot

@@ -58,10 +58,26 @@ def graph_fingerprint(num_slots: int, num_edges: int,
 
 
 def partition_fingerprint(part, frontier_hist=None) -> str:
-    """Fingerprint of a single-shard `DevicePartition` (uses the padded
-    edge-column length as the edge count — the array the engine actually
-    scans — and the CSR max degree as the skew numerator)."""
-    num_edges = int(part.src.shape[0]) if part.src is not None else 0
+    """Fingerprint of a single-shard `DevicePartition` (uses the LIVE edge
+    count — `edge_mask.sum()` — and the CSR max degree as the skew
+    numerator).
+
+    Counting live edges rather than the padded column length matters for
+    mutated partitions: `apply_edge_delta` retires edges into masked
+    tombstones and appends into slack WITHOUT changing the padded length,
+    so a padded-length key would keep serving a plan tuned for the
+    pre-mutation graph forever.  With the live count, log2 quantization
+    absorbs small deltas (same bin → same key, the adopted plan stands)
+    while large deltas shift a bin and re-key
+    (`GREEngine.refresh_plan`).
+    """
+    if part.src is None:
+        num_edges = 0
+    elif part.edge_mask is not None:
+        import numpy as np
+        num_edges = int(np.sum(np.asarray(part.edge_mask)))
+    else:
+        num_edges = int(part.src.shape[0])
     return graph_fingerprint(part.num_slots, num_edges,
                              max_out_degree=part.csr_max_deg,
                              frontier_hist=frontier_hist)

@@ -227,6 +227,107 @@ def test_cc_strategy_matrix(strategy):
     np.testing.assert_array_equal(got, ref)
 
 
+# ------------------------------------------- mutation conformance (warm)
+MUT_BACKENDS = ("null", "agent", "dense", "pipelined")
+MUT_STRATEGIES = ("dense", "compact", "auto")
+
+
+def _mutation_delta(g, seed, frac=0.08, undirected=False):
+    """A fixed-seed churn batch: retire `frac` of the live edges and add
+    the same number of fresh ones (symmetric pairs when `undirected`, so
+    CC's both-directions invariant holds).  Weights are small integers —
+    exact in f32, so warm-vs-cold comparisons stay bitwise."""
+    from repro.graph.structures import EdgeDelta
+    rng = np.random.default_rng(seed)
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    n = g.num_vertices
+    if undirected:
+        fwd = np.flatnonzero(src < dst)
+        m = max(1, int(fwd.size * frac))
+        pick = rng.choice(fwd, size=m, replace=False)
+        rem_s = np.concatenate([src[pick], dst[pick]])
+        rem_d = np.concatenate([dst[pick], src[pick]])
+        u = rng.integers(0, n, size=m)
+        v = (u + 1 + rng.integers(0, n - 1, size=m)) % n   # never u == v
+        add_s, add_d = np.concatenate([u, v]), np.concatenate([v, u])
+        m_prop = m
+    else:
+        m = max(1, int(g.num_edges * frac))
+        pick = rng.choice(g.num_edges, size=m, replace=False)
+        rem_s, rem_d = src[pick], dst[pick]
+        add_s = rng.integers(0, n, size=m)
+        add_d = rng.integers(0, n, size=m)
+        m_prop = m
+    props = {}
+    for key in g.edge_props:
+        w = rng.integers(1, 100, size=m_prop).astype(np.float32)
+        props[key] = np.concatenate([w, w]) if undirected else w
+    return EdgeDelta(add_src=add_s, add_dst=add_d, add_props=props,
+                     rem_src=rem_s, rem_dst=rem_d)
+
+
+def _warm_single(prog, g, delta, source, strategy, max_steps=300):
+    eng = GREEngine(prog, frontier=strategy, frontier_cap=32)
+    part = DevicePartition.from_graph(g)
+    prev = eng.run(part, eng.init_state(part, source=source), max_steps)
+    _, out, _ = eng.rerun_incremental(part, prev, delta, source=source,
+                                      max_steps=max_steps)
+    return np.asarray(out.vertex_data)
+
+
+def _warm_dist(prog, g, delta, source, backend, strategy, max_steps=300):
+    ag = build_agent_graph(g, greedy_partition(g, 1, batch_size=64), 1)
+    mesh = jax.make_mesh((1,), ("graph",))
+    eng = DistGREEngine(prog, mesh, ("graph",), exchange=backend,
+                        frontier=strategy, frontier_cap=64)
+    _, prev = eng.run(ag, source=source, max_steps=max_steps)
+    _, result, _, _ = eng.rerun_incremental(ag, prev, delta, source=source,
+                                            max_steps=max_steps)
+    return result
+
+
+@pytest.mark.parametrize("strategy", MUT_STRATEGIES)
+@pytest.mark.parametrize("backend", MUT_BACKENDS)
+def test_mutation_warm_equals_cold(backend, strategy):
+    """THE incremental-re-convergence invariant (docs/incremental.md): a
+    warm start from the pre-delta fixed point must land on BITWISE the
+    same fixed point as a cold recompute of the mutated graph — min is
+    idempotent and the fixed point unique, so seeding only the affected
+    region may change the path, never the answer.  Single-source BFS and
+    multi-source SSSP, every backend x frontier strategy."""
+    g = _graph("rmat", 6, 4, 11)
+    delta = _mutation_delta(g, seed=21)
+    part2 = DevicePartition.from_graph(g.apply_edge_delta(delta))
+    for prog, src in ((algorithms.bfs_program(), 0),
+                      (algorithms.sssp_program(
+                          num_sources=len(MULTI_SOURCES)), MULTI_SOURCES)):
+        ref = _single_shard(prog, part2, source=src)   # cold recompute
+        if backend == "null":
+            got = _warm_single(prog, g, delta, src, strategy)
+        else:
+            got = _warm_dist(prog, g, delta, src, backend, strategy)
+        np.testing.assert_array_equal(_fix(got), _fix(ref))
+
+
+@pytest.mark.parametrize("strategy", MUT_STRATEGIES)
+@pytest.mark.parametrize("backend", MUT_BACKENDS)
+def test_mutation_warm_equals_cold_cc(backend, strategy):
+    """CC under mutation: label propagation's support is CYCLIC, so
+    removals invalidate by reachability over the pre-delta edge set
+    (`invalidation="component"`) — the warm fixed point must still equal
+    the cold recompute bitwise on every backend x strategy."""
+    g = rmat_edges(scale=6, edge_factor=4, seed=5).dedup().as_undirected()
+    delta = _mutation_delta(g, seed=33, undirected=True)
+    part2 = DevicePartition.from_graph(g.apply_edge_delta(delta))
+    prog = algorithms.cc_program()
+    ref = _single_shard(prog, part2)
+    if backend == "null":
+        got = _warm_single(prog, g, delta, None, strategy)
+    else:
+        got = _warm_dist(prog, g, delta, None, backend, strategy)
+    np.testing.assert_array_equal(_fix(got), _fix(ref))
+
+
 # ------------------------------------------------------- plan composition
 def test_superstep_plan_composition():
     """The plan surface: engines expose the composed mode as ONE static
@@ -468,6 +569,31 @@ for backend in BACKENDS:
                max_steps=600)
     if not np.array_equal(fix(got), fix(cref)):
         failures.append(f"circulant sssp {backend}/auto")
+
+# Mutation row: warm-start re-convergence after an edge delta on the REAL
+# 8-shard mesh (the hash partition's tight pads exercise the compaction
+# fallback in agent_graph.apply_edge_delta) — bitwise vs the cold
+# single-shard dense recompute of the mutated graph.
+from repro.graph.structures import EdgeDelta
+rng = np.random.default_rng(21)
+m = max(1, g.num_edges // 20)
+pick = rng.choice(g.num_edges, size=m, replace=False)
+delta = EdgeDelta(
+    add_src=rng.integers(0, g.num_vertices, size=m),
+    add_dst=rng.integers(0, g.num_vertices, size=m),
+    add_props={"weight": rng.integers(1, 100, size=m).astype(np.float32)},
+    rem_src=np.asarray(g.src)[pick], rem_dst=np.asarray(g.dst)[pick])
+cold = reference(algorithms.sssp_program(),
+                 DevicePartition.from_graph(g.apply_edge_delta(delta)),
+                 source=0)
+for backend in BACKENDS:
+    eng = DistGREEngine(algorithms.sssp_program(), mesh, ("graph",),
+                        exchange=backend, frontier="auto", frontier_cap=64)
+    _, prev = eng.run(ag, source=0, max_steps=300)
+    _, warm, _, _ = eng.rerun_incremental(ag, prev, delta, source=0,
+                                          max_steps=300)
+    if not np.array_equal(fix(warm), fix(cold)):
+        failures.append(f"mutation warm sssp {backend}")
 
 assert not failures, failures
 print("CONFORMANCE_OK")

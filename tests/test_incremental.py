@@ -1,0 +1,282 @@
+"""Incremental re-convergence on evolving graphs: the mutation property
+suite (docs/incremental.md).
+
+The invariant under test is the one the whole delta-ingress design hangs
+on: for min-monoid traversal programs the fixed point is UNIQUE and the
+superstep operator idempotent, so a warm start from the previous fixed
+point — fresh init values on the invalidated region, scatter activity on
+the affected seeds only — must land BITWISE on the same fixed point as a
+from-scratch run of the mutated graph.  The property test drives random
+INTERLEAVED add/remove batch sequences (add-only, remove-only, and mixed
+batches) through `DevicePartition.apply_edge_delta` +
+`GREEngine.warm_start_state` on power-law (R-MAT) and circulant graphs
+and checks, after EVERY batch:
+
+  * warm == cold, bitwise (the conformance invariant, per batch);
+  * the delta-tile invariants hold on the mutated partition — tombstones
+    repointed at the sink, the CSR position index partitions the live
+    edge set exactly, degree buckets consistent with live degrees,
+    `out_degree` aux matching the live columns;
+  * the affected-seed set is a sound superset: every vertex whose final
+    value moved is either reset at warm start or reachable from a seeded
+    vertex over the mutated live edges (nothing outside the seeds'
+    influence cone may change, else the warm run silently depended on
+    stale scatter state).
+
+Each hypothesis test has a fixed-seed twin so the suite still runs where
+`hypothesis` is absent (same pattern as tests/test_conformance.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import algorithms
+from repro.core.engine import DevicePartition, GREEngine
+from repro.graph.generators import circulant_graph, rmat_edges
+from repro.graph.structures import EdgeDelta
+
+
+def _graph(kind, scale, edge_factor, seed):
+    if kind == "circulant":
+        return circulant_graph(1 << scale, degree=edge_factor, weights=True,
+                               seed=seed)
+    return rmat_edges(scale=scale, edge_factor=edge_factor, seed=seed,
+                      weights=True).dedup()
+
+
+def _random_delta(g, rng):
+    """One churn batch: add-only, remove-only, or mixed (interleaved over
+    the sequence).  Add weights are small integers — exact in f32."""
+    mode = rng.integers(0, 3)   # 0 = mixed, 1 = add-only, 2 = remove-only
+    n = g.num_vertices
+    n_add = 0 if mode == 2 else int(rng.integers(1, max(2, g.num_edges // 8)))
+    n_rem = 0 if mode == 1 else int(rng.integers(1, max(2, g.num_edges // 8)))
+    n_rem = min(n_rem, g.num_edges - 1)   # never empty the graph
+    pick = rng.choice(g.num_edges, size=n_rem, replace=False)
+    props = {k: rng.integers(1, 100, size=n_add).astype(np.float32)
+             for k in g.edge_props}
+    return EdgeDelta(add_src=rng.integers(0, n, size=n_add),
+                     add_dst=rng.integers(0, n, size=n_add),
+                     add_props=props,
+                     rem_src=np.asarray(g.src)[pick],
+                     rem_dst=np.asarray(g.dst)[pick])
+
+
+def check_tile_invariants(part):
+    """The delta-tile contract any mutation sequence must preserve."""
+    n, slots = part.num_masters, part.num_slots
+    sink = n
+    src, dst = np.asarray(part.src), np.asarray(part.dst)
+    mask = np.asarray(part.edge_mask)
+    # tombstones + padding: BOTH endpoints repointed at the identity sink
+    assert np.all(src[~mask] == sink) and np.all(dst[~mask] == sink)
+    # live edges reference master slots only
+    assert np.all(src[mask] < n) and np.all(dst[mask] < n)
+    if part.edges_sorted_by_dst:
+        assert np.all(np.diff(dst[mask]) >= 0), "dst-sort contract broken"
+    # the CSR position index partitions the live set EXACTLY: each slot's
+    # range reads its own live out-edges, every live edge appears once
+    indptr = np.asarray(part.csr_indptr)
+    eidx = np.asarray(part.csr_eidx)
+    total = int(indptr[-1])
+    assert total == int(mask.sum())
+    seen = eidx[:total]
+    assert np.array_equal(np.sort(seen), np.flatnonzero(mask))
+    for v in range(slots):
+        rows = eidx[indptr[v]:indptr[v + 1]]
+        assert np.all(src[rows] == v) and np.all(mask[rows])
+    # degree bounds: static facets are upper bounds on live degrees
+    deg = np.diff(indptr)
+    assert (deg.max() if deg.size else 0) <= part.csr_max_deg
+    bid = np.asarray(part.bucket_id)
+    assert np.array_equal(bid >= 0, deg[:slots] > 0)
+    for b, (cap, mdeg) in enumerate(zip(part.bucket_sizes,
+                                        part.bucket_max_deg)):
+        members = np.flatnonzero(bid == b)
+        assert members.size <= cap
+        if members.size:
+            assert deg[members].max() <= mdeg
+    # aux out-degree tracks the live columns
+    want = np.bincount(src[mask], minlength=slots)[:n]
+    assert np.array_equal(np.asarray(part.aux["out_degree"]),
+                          want.astype(np.float32))
+
+
+def _reach(n, src, dst, seeds):
+    r = seeds.copy()
+    while True:
+        nxt = r.copy()
+        np.logical_or.at(nxt, dst, r[src])
+        if np.array_equal(nxt, r):
+            return r
+        r = nxt
+
+
+def _check_mutation_sequence(kind, scale, edge_factor, seed, batches=3):
+    g = _graph(kind, scale, edge_factor, seed)
+    prog = algorithms.sssp_program()
+    eng = GREEngine(prog, frontier="auto", frontier_cap=32)
+    ref_eng = GREEngine(prog)   # cold-recompute reference, dense scan
+    part = DevicePartition.from_graph(g, edge_slack=16)
+    state = eng.run(part, eng.init_state(part, source=0), 300)
+    rng = np.random.default_rng(seed + 7)
+    for _ in range(batches):
+        delta = _random_delta(g, rng)
+        g = g.apply_edge_delta(delta)
+        new_part, report = part.apply_edge_delta(delta)
+        check_tile_invariants(new_part)
+        prev_vd = np.asarray(state.vertex_data)
+        wstate = eng.warm_start_state(new_part, state, report, source=0)
+        warm_init = np.asarray(wstate.vertex_data)
+        n = new_part.num_masters
+        seeds = np.asarray(wstate.active_scatter)[:n]
+        out = eng.run(new_part, wstate, 300)
+        warm = np.asarray(out.vertex_data)
+        # 1. incremental == from-scratch, bitwise, after EVERY batch
+        ref_part = DevicePartition.from_graph(g)
+        cold = np.asarray(ref_eng.run(
+            ref_part, ref_eng.init_state(ref_part, source=0), 300
+        ).vertex_data)
+        np.testing.assert_array_equal(warm, cold)
+        # 2. affected seeds cover the changed vertices: anything that moved
+        #    was reset at warm start or sits in a seed's influence cone
+        if report.num_adds:
+            assert seeds[np.unique(report.added_src)].all()
+        lsrc = np.asarray(new_part.src)[np.asarray(new_part.edge_mask)]
+        ldst = np.asarray(new_part.dst)[np.asarray(new_part.edge_mask)]
+        cone = _reach(n, lsrc.astype(np.int64), ldst.astype(np.int64),
+                      seeds.astype(bool))
+        changed = warm != prev_vd
+        assert not np.any(changed & ~cone & ~(warm_init != prev_vd))
+        part, state = new_part, out
+
+
+# --------------------------------------------------------- fixed-seed twins
+@pytest.mark.parametrize("kind", ["rmat", "circulant"])
+def test_mutation_sequence_fixed(kind):
+    _check_mutation_sequence(kind, 6, 4, seed=3)
+
+
+def test_empty_delta_is_noop():
+    """A delta with nothing in it must re-converge in zero supersteps and
+    leave the fixed point untouched (the warm seed set is empty)."""
+    g = _graph("rmat", 6, 4, 3)
+    eng = GREEngine(algorithms.sssp_program())
+    part = DevicePartition.from_graph(g)
+    state = eng.run(part, eng.init_state(part, source=0), 300)
+    new_part, out, report = eng.rerun_incremental(
+        part, state, EdgeDelta(), source=0)
+    assert report.num_adds == 0 and report.num_removed == 0
+    assert not report.compacted
+    np.testing.assert_array_equal(np.asarray(out.vertex_data),
+                                  np.asarray(state.vertex_data))
+
+
+def test_slack_append_in_place_then_compact():
+    """Adds consume slack WITHOUT regrowing the padded edge length (no
+    recompile); once the slack is exhausted the partition compacts with
+    x1.25 headroom and flags it in the report."""
+    g = _graph("rmat", 6, 4, 3)
+    part = DevicePartition.from_graph(g, edge_slack=8)
+    e_pad = int(np.asarray(part.src).shape[0])
+    rng = np.random.default_rng(0)
+    small = EdgeDelta(
+        add_src=rng.integers(0, g.num_vertices, size=8),
+        add_dst=rng.integers(0, g.num_vertices, size=8),
+        add_props={"weight": np.ones(8, np.float32)})
+    p2, r2 = part.apply_edge_delta(small)
+    assert not r2.compacted
+    assert int(np.asarray(p2.src).shape[0]) == e_pad   # same static shape
+    check_tile_invariants(p2)
+    p3, r3 = p2.apply_edge_delta(small)                # slack now exhausted
+    assert r3.compacted
+    assert int(np.asarray(p3.src).shape[0]) > e_pad
+    assert int(np.asarray(p3.src).shape[0]) % 8 == 0
+    check_tile_invariants(p3)
+
+
+def test_tombstones_identity_pinned():
+    """Removal without compaction: the padded length is unchanged and the
+    retired rows are repointed at the sink so even mask-blind scans
+    (dense frontier) deliver identity messages only."""
+    g = _graph("rmat", 6, 4, 3)
+    part = DevicePartition.from_graph(g)
+    rng = np.random.default_rng(1)
+    pick = rng.choice(g.num_edges, size=10, replace=False)
+    delta = EdgeDelta(rem_src=np.asarray(g.src)[pick],
+                      rem_dst=np.asarray(g.dst)[pick])
+    p2, rep = part.apply_edge_delta(delta)
+    assert rep.num_removed == 10 and not rep.compacted
+    assert np.asarray(p2.src).shape == np.asarray(part.src).shape
+    assert int(np.asarray(p2.edge_mask).sum()) == g.num_edges - 10
+    check_tile_invariants(p2)
+
+
+def test_unsupported_programs_refuse_warm_start():
+    """sum+halts traversals (forward-push PPR) have no sound warm start —
+    delivered residual mass cannot be re-attributed — and halting min
+    programs without an invalidation policy cannot absorb REMOVALS.
+    Both must refuse loudly instead of converging to a wrong fixed
+    point."""
+    g = _graph("rmat", 6, 4, 3)
+    part = DevicePartition.from_graph(g)
+    pick = np.asarray([0])
+    rem = EdgeDelta(rem_src=np.asarray(g.src)[pick],
+                    rem_dst=np.asarray(g.dst)[pick])
+    eng = GREEngine(algorithms.ppr_push_program(2), frontier="dense")
+    state = eng.init_state(part, source=[0, 1])
+    with pytest.raises(ValueError, match="warm"):
+        eng.rerun_incremental(part, state, EdgeDelta(), source=[0, 1])
+    import dataclasses as dc
+    stripped = dc.replace(algorithms.bfs_program(), invalidation=None)
+    eng2 = GREEngine(stripped)
+    st2 = eng2.run(part, eng2.init_state(part, source=0), 300)
+    with pytest.raises(ValueError, match="invalidation"):
+        eng2.rerun_incremental(part, st2, rem, source=0)
+    # adds-only is fine without an invalidation policy
+    add = EdgeDelta(add_src=[1], add_dst=[2],
+                    add_props={"weight": [1.0]})
+    _, out, _ = eng2.rerun_incremental(part, st2, add, source=0)
+    assert np.isfinite(np.asarray(out.vertex_data)).any()
+
+
+def test_pagerank_warm_start_converges_close():
+    """Iterative dense-frontier programs (PageRank) warm-start by carrying
+    the previous values verbatim — no invalidation needed, every vertex
+    re-scatters — and must land within tolerance of the cold run (power
+    iteration's fixed point is attracting, not bitwise-path-stable)."""
+    g = _graph("rmat", 6, 4, 3)
+    prog = algorithms.pagerank_program()
+    eng = GREEngine(prog, frontier="dense")
+    part = DevicePartition.from_graph(g)
+    state = eng.run(part, eng.init_state(part), 50)
+    rng = np.random.default_rng(2)
+    pick = rng.choice(g.num_edges, size=6, replace=False)
+    delta = EdgeDelta(add_src=rng.integers(0, g.num_vertices, size=6),
+                      add_dst=rng.integers(0, g.num_vertices, size=6),
+                      add_props={"weight": np.ones(6, np.float32)},
+                      rem_src=np.asarray(g.src)[pick],
+                      rem_dst=np.asarray(g.dst)[pick])
+    new_part, out, _ = eng.rerun_incremental(part, state, delta, max_steps=50)
+    ref_part = DevicePartition.from_graph(g.apply_edge_delta(delta))
+    cold = np.asarray(eng.run(ref_part, eng.init_state(ref_part), 50)
+                      .vertex_data)
+    np.testing.assert_allclose(np.asarray(out.vertex_data), cold,
+                               rtol=0, atol=2e-3)
+
+
+# ------------------------------------------------------- hypothesis sweep
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(kind=st.sampled_from(["rmat", "circulant"]),
+           scale=st.integers(5, 6), edge_factor=st.integers(2, 6),
+           seed=st.integers(0, 999))
+    def test_mutation_sequence_random(kind, scale, edge_factor, seed):
+        _check_mutation_sequence(kind, scale, edge_factor, seed)

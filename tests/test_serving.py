@@ -223,6 +223,112 @@ def test_serving_never_recompiles(rmat):
             assert fn._cache_size() == 1
 
 
+@pytest.mark.parametrize("backend", GRAPH_BACKENDS)
+@pytest.mark.parametrize("policy", ("finish", "reseed"))
+def test_apply_delta_mid_flight_never_torn(backend, policy):
+    """Serving under mutation: a delta landing while a query is mid-flight
+    must never produce a torn result.  Under "finish" the resident
+    completes on the pre-delta snapshot; under "reseed" it restarts on the
+    mutated graph — either way its answer is bitwise-equal to a fresh
+    single-query run on the corresponding snapshot, and queries admitted
+    after the delta see the mutated graph."""
+    from repro.graph.structures import EdgeDelta
+    n = 128
+    g = circulant_graph(n, degree=2, weights=True, seed=0)
+    delta = EdgeDelta(add_src=[0, 64], add_dst=[64, 0],
+                      add_props={"weight": [1.0, 1.0]},
+                      rem_src=[10, 11], rem_dst=[11, 10])
+    g2 = g.apply_edge_delta(delta)
+    prog = algorithms.bfs_program(D)
+    b = _graph_batcher(backend, prog, g)
+    q_old = b.submit(0)                  # resident when the delta lands
+    b.pump()
+    for _ in range(3):                   # mid-flight (ring ecc >> 3)
+        b.tick()
+    b.apply_delta(delta, policy=policy)
+    q_new = b.submit(5)                  # admitted after the delta
+    b.run()
+    assert q_old.status == "done" and q_new.status == "done"
+    resident_snapshot = g if policy == "finish" else g2
+    f1 = _graph_batcher(backend, prog, resident_snapshot)
+    f1.submit(0)
+    (r1,) = f1.run()
+    assert np.array_equal(_fix(r1.result), _fix(q_old.result))
+    f2 = _graph_batcher(backend, prog, g2)
+    f2.submit(5)
+    (r2,) = f2.run()
+    assert np.array_equal(_fix(r2.result), _fix(q_new.result))
+    f3 = _graph_batcher(backend, prog, g)
+    f3.submit(5)
+    (r3,) = f3.run()
+    assert not np.array_equal(_fix(r3.result), _fix(q_new.result)), \
+        "delta invisible to post-delta admissions"
+
+
+def test_apply_delta_holds_admissions_until_swap():
+    """"finish"-policy semantics for QUEUED work: a query submitted while
+    a delta is pending must not be admitted onto the pre-delta snapshot —
+    it waits for the resident lanes to drain and runs on the mutated
+    graph; an idle batcher swaps immediately."""
+    from repro.graph.structures import EdgeDelta
+    n = 128
+    g = circulant_graph(n, degree=2, weights=True, seed=0)
+    delta = EdgeDelta(add_src=[0, 64], add_dst=[64, 0],
+                      add_props={"weight": [1.0, 1.0]},
+                      rem_src=[10, 11], rem_dst=[11, 10])
+    g2 = g.apply_edge_delta(delta)
+    prog = algorithms.bfs_program(D)
+    b = _graph_batcher("null", prog, g)
+    qa = b.submit(0)
+    b.pump()
+    b.tick()
+    b.apply_delta(delta)                 # default policy = "finish"
+    assert b._pending_deltas             # resident lane holds the swap
+    qb = b.submit(5)                     # queued during the pending delta
+    b.run()
+    assert not b._pending_deltas
+    for q, snapshot, src in ((qa, g, 0), (qb, g2, 5)):
+        f = _graph_batcher("null", prog, snapshot)
+        f.submit(src)
+        (r,) = f.run()
+        assert np.array_equal(_fix(r.result), _fix(q.result)), q.uid
+    # idle batcher: the swap happens inside apply_delta itself
+    b2 = _graph_batcher("null", prog, g)
+    b2.apply_delta(delta)
+    assert not b2._pending_deltas
+
+
+@pytest.mark.parametrize("backend", GRAPH_BACKENDS)
+def test_recycled_lane_after_delta_bitwise(backend, rmat):
+    """The recycling invariant survives mutation: lanes recycled AFTER a
+    delta landed answer bitwise-equal to fresh runs on the mutated
+    graph — the rebuilt admit path resets lanes against the new
+    topology's init state."""
+    from repro.graph.structures import EdgeDelta
+    rng = np.random.default_rng(7)
+    pick = rng.choice(rmat.num_edges, size=8, replace=False)
+    delta = EdgeDelta(
+        add_src=rng.integers(0, rmat.num_vertices, size=8),
+        add_dst=rng.integers(0, rmat.num_vertices, size=8),
+        add_props={"weight": np.ones(8, np.float32)},
+        rem_src=np.asarray(rmat.src)[pick],
+        rem_dst=np.asarray(rmat.dst)[pick])
+    g2 = rmat.apply_edge_delta(delta)
+    prog = algorithms.bfs_program(D)
+    b = _graph_batcher(backend, prog, rmat)
+    b.apply_delta(delta)                 # idle: swaps immediately
+    sources = [0, 3, 17, 42, 99, 7, 55, 123]   # 2 rounds of lane recycling
+    for s in sources:
+        b.submit(s)
+    done = b.run()
+    assert [q.status for q in done] == ["done"] * len(sources)
+    for q in done:
+        fresh = _graph_batcher(backend, prog, g2)
+        fresh.submit(q.source)
+        (ref,) = fresh.run()
+        assert np.array_equal(_fix(ref.result), _fix(q.result)), q.uid
+
+
 def test_metrics_and_frontend(rmat):
     """SLO metrics are populated and a mixed-kind frontend drains both
     batchers."""

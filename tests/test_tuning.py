@@ -277,6 +277,79 @@ def test_engine_auto_tuned_miss_keeps_defaults(scenario, tmp_path):
     assert not eng._auto_plan_pending
 
 
+# ------------------------------------------- mutation: fingerprint refresh
+def test_fingerprint_counts_live_edges_not_padded_length():
+    """The stale-plan regression (docs/incremental.md): `apply_edge_delta`
+    tombstones edges WITHOUT changing the padded column length, so a
+    fingerprint keyed on `src.shape[0]` would keep serving the
+    pre-mutation plan forever.  Halving the live set at identical padded
+    length must change the key."""
+    from repro.graph.structures import EdgeDelta
+    from repro.tuning import partition_fingerprint
+    g = circulant_graph(1 << 9, degree=8)
+    part = DevicePartition.from_graph(g)
+    rng = np.random.default_rng(0)
+    pick = rng.choice(g.num_edges, size=g.num_edges // 2, replace=False)
+    half, rep = part.apply_edge_delta(EdgeDelta(
+        rem_src=np.asarray(g.src)[pick], rem_dst=np.asarray(g.dst)[pick]))
+    assert not rep.compacted
+    assert np.asarray(half.src).shape == np.asarray(part.src).shape
+    assert partition_fingerprint(half) != partition_fingerprint(part)
+
+
+def test_refresh_plan_absorbs_small_delta(scenario, tmp_path):
+    """log2 quantization means a small churn batch stays in the same
+    fingerprint bin: `refresh_plan` reports no key change and the adopted
+    plan stands — mutation-heavy serving must not thrash the cache."""
+    from repro.graph.structures import EdgeDelta
+    prog, g = scenario
+    path = tmp_path / "plans.json"
+    tune(prog, g, cache=path, space=SMOKE_SPACE,
+         evaluator=CostModelEvaluator(prog, g))
+    eng = GREEngine(prog, plan="auto-tuned", plan_cache=path)
+    part = DevicePartition.from_graph(g)
+    eng.init_state(part, source=0)
+    adopted = (eng.frontier, eng.frontier_cap)
+    rng = np.random.default_rng(1)
+    pick = rng.choice(g.num_edges, size=5, replace=False)
+    small, _ = part.apply_edge_delta(EdgeDelta(
+        rem_src=np.asarray(g.src)[pick], rem_dst=np.asarray(g.dst)[pick]))
+    assert eng.refresh_plan(small) is False
+    assert (eng.frontier, eng.frontier_cap) == adopted
+
+
+def test_refresh_plan_rekeys_large_delta_and_adopts(scenario, tmp_path):
+    """A delta that shifts a fingerprint bin re-keys the engine and adopts
+    whatever the cache holds under the NEW key — the fix for serving a
+    plan tuned on a graph that no longer exists."""
+    from repro.graph.structures import EdgeDelta
+    from repro.tuning import plan_cache_key as key_of
+    prog, g = scenario
+    path = tmp_path / "plans.json"
+    tune(prog, g, cache=path, space=SMOKE_SPACE,
+         evaluator=CostModelEvaluator(prog, g))
+    eng = GREEngine(prog, plan="auto-tuned", plan_cache=path)
+    part = DevicePartition.from_graph(g)
+    eng.init_state(part, source=0)
+    old_key = eng._plan_key
+    assert old_key is not None
+    rng = np.random.default_rng(2)
+    pick = rng.choice(g.num_edges, size=g.num_edges // 2, replace=False)
+    big, _ = part.apply_edge_delta(EdgeDelta(
+        rem_src=np.asarray(g.src)[pick], rem_dst=np.asarray(g.dst)[pick]))
+    new_key = key_of(part=big, program=prog, mesh_size=1,
+                     frontier_hist=eng._plan_hist)
+    assert new_key != old_key
+    plan2 = SuperstepPlan(strategy="flat", frontier_cap=16)
+    PlanCache(path).store(new_key, plan2)
+    assert eng.refresh_plan(big) is True
+    assert eng._plan_key == new_key
+    assert eng.frontier == "flat" and eng.frontier_cap == 16
+    # engines that never consulted a cache have nothing to refresh
+    plain = GREEngine(prog)
+    assert plain.refresh_plan(big) is False
+
+
 def test_dist_engine_plan_maps_phase_to_exchange(scenario):
     import jax
     from repro.core.dist_engine import DistGREEngine
