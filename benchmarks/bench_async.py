@@ -1,0 +1,203 @@
+"""Bounded-staleness async supersteps vs the synchronous exchange.
+
+Races the sync AgentExchange against the k-deep AsyncAgentExchange ring
+(`exchange="async"`) on single-source BFS, whole-run wall clock to
+quiescence:
+
+  sync      — AgentExchange: the refresh + combiner-flush collectives
+              are a barrier in EVERY superstep;
+  async-k2 / async-k4 — the staleness ring: remote partials accumulate
+              in k ring slots and flush in ONE collective every k
+              supersteps; shards proceed on stale remote state in
+              between, and the monotone (min) fixed point is unchanged.
+
+Two regimes, deliberately opposite:
+
+  skewed ghost-chord ring — a directed ring sliced into contiguous
+      EQUAL vertex blocks (master placement is cap-balanced by
+      construction — `build_agent_graph` rebalances any vertex-count
+      skew away, which would turn intra-block hops into agent-mediated
+      crossings), so the BFS wavefront is intra-shard except at the
+      k - 1 block boundaries and supersteps stay ~equal across modes.
+      The imbalance lives in the EDGE load: every vertex outside block
+      0 carries backward "ghost" chords into the previous block, with
+      per-shard ghost degree skewed 2x geometrically.  Ghosts never
+      improve a distance (their target is always closer to the source)
+      but they populate ~cap combiner agents per shard, so the sync
+      backend hauls a topology-sized flush payload across the mesh on
+      every superstep — and waits on the heaviest shard to produce it —
+      while the ring amortizes the same payload k-fold.  The parent
+      asserts the async win here (>= `floor`x at the best measured
+      ring depth).
+
+  barabasi-albert + hash partition — nearly every edge crosses shards,
+      so each BFS depth needs a flush before the next depth can make
+      progress: supersteps inflate ~k-fold and eat the collective
+      savings.  Recorded trend-only (no floor) as the documented
+      counter-regime; the plan autotuner's measured search is what
+      chooses per scenario.
+
+Both regimes pin `frontier="dense"`: the masked every-edge scan keeps
+the superstep body identical across backends, so the measured delta is
+the exchange protocol itself.  (Compacted frontiers run the gather
+machinery once per edge TILE, which double-charges the split backends
+on ~empty frontiers and measures the frontier stage, not the ring.)
+
+Runs in a subprocess because the multi-device XLA_FLAGS must be set
+before jax initializes.  Same protocol as bench_exchange_overlap:
+single-threaded simulated devices, interleaved measurement rounds,
+per-mode medians; entries emit `gate=False` (absolute times of simulated
+devices on shared CI hosts are scheduler-bimodal) — the async-vs-sync
+comparison lives in the within-run medians of the derived speedups.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ROOT = Path(__file__).resolve().parent.parent
+
+CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=%(k)d "
+                           "--xla_cpu_multi_thread_eigen=false "
+                           "intra_op_parallelism_threads=1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import time
+import numpy as np
+import jax
+
+from repro.graph.structures import Graph
+from repro.graph.generators import barabasi_albert_graph
+from repro.core.partition import hash_partition
+from repro.core.agent_graph import build_agent_graph
+from repro.core.dist_engine import DistGREEngine
+from repro.core import algorithms
+
+n, k, iters = %(n)d, %(k)d, %(iters)d
+n_ba = %(n_ba)d
+
+def ghost_ring(n, k):
+    # directed ring in contiguous cap-aligned blocks (block b = shard b's
+    # masters, exactly) + backward ghost chords i -> i - (cap + 1): each
+    # crosses one block boundary, never improves a BFS distance, and the
+    # per-shard ghost degree doubles per block -- skewed combiner/edge
+    # load per shard with an intra-shard critical path.
+    cap = -(-(-(-n // k)) // 8) * 8
+    n = k * cap
+    src = np.arange(n, dtype=np.int64)
+    dst = (src + 1) %% n
+    gs, gd = [src], [dst]
+    for b in range(1, k):
+        i = np.arange(max(b * cap, cap + 1), (b + 1) * cap, dtype=np.int64)
+        for _ in range(2 ** (k - 1 - b)):
+            gs.append(i)
+            gd.append(i - (cap + 1))
+    src, dst = np.concatenate(gs), np.concatenate(gd)
+    g = Graph(num_vertices=n, src=src, dst=dst)
+    part = (src // cap).astype(np.int64)
+    owner = (np.arange(n, dtype=np.int64) // cap).astype(np.int32)
+    return g, part, owner, n
+
+def modes_for(g, part, max_steps, owner=None, source=0):
+    ag = build_agent_graph(g, part, k, owner=owner)
+    mesh = jax.make_mesh((k,), ("graph",))
+    out = {}
+    for mode, exchange, stal in (("sync", "agent", 0),
+                                 ("async-k2", "async", 2),
+                                 ("async-k4", "async", 4)):
+        kw = {"staleness": stal} if exchange == "async" else {}
+        eng = DistGREEngine(algorithms.bfs_program(), mesh, ("graph",),
+                            exchange=exchange, frontier="dense", **kw)
+        topo = eng.device_topology(ag)
+        state = eng.init_state(ag, source=source)
+        fn = eng.make_run(ag, max_steps=max_steps)
+        final = jax.block_until_ready(fn(topo, state))  # compile + warm
+        out[mode] = (fn, topo, state, int(np.asarray(final.step).max()))
+    return out
+
+def race(fns, iters):
+    samples = {m: [] for m in fns}
+    for _ in range(iters):
+        for m, (fn, topo, state, _) in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(topo, state))
+            samples[m].append(time.perf_counter() - t0)
+    return {m: sorted(s)[len(s) // 2] * 1e6 for m, s in samples.items()}
+
+# ---- regime 1: skewed ghost-chord ring, contiguous equal blocks
+g, part, owner, n = ghost_ring(n, k)
+fns = modes_for(g, part, n + 16 * k + 64, owner=owner)
+us = race(fns, iters)
+for m, (_, _, _, nsteps) in fns.items():
+    print("RESULT " + json.dumps(
+        {"scenario": "skew", "mode": m, "us_per_run": us[m],
+         "supersteps": nsteps, "E": g.num_edges}), flush=True)
+best = max(us["sync"] / us["async-k2"], us["sync"] / us["async-k4"])
+print("RESULT " + json.dumps(
+    {"scenario": "skew", "mode": "summary",
+     "speedup_k2": us["sync"] / us["async-k2"],
+     "speedup_k4": us["sync"] / us["async-k4"],
+     "best_speedup": best}), flush=True)
+
+# ---- regime 2 (trend-only): power-law, hash partition, crossing-heavy
+gb = barabasi_albert_graph(n_ba, m=4, seed=3).dedup()
+fns = modes_for(gb, hash_partition(gb, k), 64 * k)
+us = race(fns, iters)
+for m, (_, _, _, nsteps) in fns.items():
+    print("RESULT " + json.dumps(
+        {"scenario": "ba", "mode": m, "us_per_run": us[m],
+         "supersteps": nsteps, "E": gb.num_edges}), flush=True)
+print("RESULT " + json.dumps(
+    {"scenario": "ba", "mode": "summary",
+     "speedup_k2": us["sync"] / us["async-k2"],
+     "speedup_k4": us["sync"] / us["async-k4"]}), flush=True)
+"""
+
+
+def run(n: int = 2048, k: int = 4, iters: int = 5,
+        n_ba: int = 1024, floor: float = 1.3):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT), str(ROOT / "src"), env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         CHILD % dict(n=n, k=k, iters=iters, n_ba=n_ba)],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=ROOT)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench child failed:\n{proc.stderr[-4000:]}")
+    rows = [json.loads(line.split(" ", 1)[1])
+            for line in proc.stdout.splitlines() if line.startswith("RESULT ")]
+    summaries = {r["scenario"]: r for r in rows if r["mode"] == "summary"}
+    for r in rows:
+        if r["mode"] == "summary":
+            continue
+        s = summaries[r["scenario"]]
+        tag = {"skew": f"skew{n}", "ba": f"ba{n_ba}"}[r["scenario"]]
+        derived = f"k={k};supersteps={r['supersteps']}"
+        if r["mode"] == "sync":
+            derived += (f";speedup_k2={s['speedup_k2']:.2f}"
+                        f";speedup_k4={s['speedup_k4']:.2f}")
+        emit(f"async_{r['mode']}_{tag}_k{k}", r["us_per_run"], derived,
+             edges=r["E"] * r["supersteps"], gate=False)
+    best = summaries["skew"]["best_speedup"]
+    # the tentpole's payoff floor: on the skew-imbalanced low-crossing
+    # scenario the flush amortization must show up as wall clock
+    assert best >= floor, (
+        f"async best speedup {best:.2f}x < {floor}x on the skewed "
+        f"ghost-chord ring scenario")
+    return summaries
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

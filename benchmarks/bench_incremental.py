@@ -42,12 +42,19 @@ def _churn(g, frac, seed):
     add the same count of fresh random ones (integer weights: exact in
     f32, so warm == cold stays bitwise)."""
     rng = np.random.default_rng(seed)
+    n = g.num_vertices
     m = max(1, int(g.num_edges * frac))
     pick = rng.choice(g.num_edges, size=m, replace=False)
+    add_s = rng.integers(0, n, size=m)
+    add_d = rng.integers(0, n, size=m)
+    # in-batch duplicate (src, dst) rows are rejected by delta ingress
+    _, first = np.unique(add_s.astype(np.int64) * n + add_d,
+                         return_index=True)
+    keep = np.sort(first)
+    add_s, add_d = add_s[keep], add_d[keep]
     return EdgeDelta(
-        add_src=rng.integers(0, g.num_vertices, size=m),
-        add_dst=rng.integers(0, g.num_vertices, size=m),
-        add_props={"weight": rng.integers(1, 100, size=m)
+        add_src=add_s, add_dst=add_d,
+        add_props={"weight": rng.integers(1, 100, size=keep.size)
                    .astype(np.float32)},
         rem_src=np.asarray(g.src)[pick], rem_dst=np.asarray(g.dst)[pick])
 

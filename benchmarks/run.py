@@ -14,7 +14,7 @@ import json
 import platform
 import sys
 
-from benchmarks import (bench_exchange_overlap, bench_frontier,
+from benchmarks import (bench_async, bench_exchange_overlap, bench_frontier,
                         bench_gas_vs_sc, bench_incremental, bench_memory,
                         bench_pagerank, bench_partition, bench_serving,
                         bench_traversal, bench_tuning, bench_vector_combine,
@@ -25,6 +25,7 @@ SUITES = {
     "traversal": bench_traversal.main,   # Fig. 8c-d
     "frontier": bench_frontier.main,     # dense vs compacted frontier
     "exchange_overlap": bench_exchange_overlap.main,  # §6.2 pipelined flush
+    "async": bench_async.main,           # bounded-staleness ring vs sync
     "weak": bench_weak.main,             # Fig. 10
     "partition": bench_partition.main,   # Fig. 11/12/13 + §5.1
     "memory": bench_memory.main,         # §7.1.2 memory claim
@@ -51,6 +52,8 @@ SMOKE = {
                                                             iters=3)),
     "exchange_overlap": lambda: bench_exchange_overlap.run(scale=10, k=2,
                                                            steps=24, iters=9),
+    # the >= 1.3x flush-amortization floor is asserted inside the bench
+    "async": lambda: bench_async.run(n=512, iters=3, n_ba=256),
     "vector": lambda: bench_vector_combine.run(scale=8, d_feat=64, iters=2),
     # powerlaw iters=7: the tuned-vs-default comparison is interleaved,
     # but the ~3ms BA runs still need a wide median on 2-core hosts

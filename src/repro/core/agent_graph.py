@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.core.partition import assign_owners, rebalance_owners
 from repro.graph.structures import (DeltaReport, Graph, csr_layout,
-                                    degree_buckets, removal_selector)
+                                    degree_buckets, removal_selector,
+                                    validate_edge_delta)
 
 
 @dataclasses.dataclass
@@ -279,13 +280,22 @@ def apply_edge_delta(ag: AgentGraph, delta, pad_multiple: int = 8):
     Returns ``(new_ag, DeltaReport)``; `ag` is not mutated.
     """
     V, k, cap, sink = ag.num_vertices, ag.k, ag.cap, ag.sink
+    s2o = slot_to_original(ag)
+    # ---- validate up front, against the ORIGINAL-id live edge set, with
+    # the SAME rules as the single-shard path (structures.validate_edge_delta)
+    # — a malformed batch fails identically on a mesh and on one device.
+    live_keys = []
+    for i in range(k):
+        m = ag.edge_mask[i]
+        live_keys.append(s2o[i][ag.src[i][m]] * np.int64(V)
+                         + s2o[i][ag.dst[i][m]])
+    validate_edge_delta(delta, V,
+                        live_keys=(np.concatenate(live_keys) if live_keys
+                                   else np.zeros(0, np.int64)))
     if delta.num_adds:
-        hi = int(max(delta.add_src.max(), delta.add_dst.max()))
-        assert hi < V, (hi, V)
         for name in ag.edge_props:
             if name not in delta.add_props:
                 raise KeyError(f"delta adds missing edge prop {name!r}")
-    s2o = slot_to_original(ag)
     owner = (ag.old2new // cap).astype(np.int64)
 
     # ---- removals: match (src, dst) pairs in original-id space

@@ -21,11 +21,18 @@ engine — with a pluggable ExchangeBackend supplying the communication:
       superstep i+1 (double-buffered `Mailbox`), overlapping communication
       with computation (paper §6.2) at E edge-scans per superstep where
       `overlap=True` needs 2·E.
+  exchange="async" → AsyncAgentExchange: bounded-staleness execution over
+      the same split tiles — the Mailbox generalized to a `staleness=k`
+      deep ring so remote partials cross shards only once per k supersteps
+      (one refresh + one flush collective per WINDOW instead of per step)
+      while local updates merge eagerly every step.  Monotone ⊕=min/max
+      halting programs only (`VertexProgram.monotone`); sum-monoid
+      programs refuse with ValueError at construction.
 
 Every backend runs through the SAME driver loop: the engine's
 `SuperstepPlan` (repro.core.plan) selects the exchange phase shape
-("sync" vs "pipelined") from the backend and `plan.execute_plan` drives
-it per shard.  This module owns only backend/plan selection, host→device
+("sync" vs "pipelined" vs "async") from the backend and
+`plan.execute_plan` drives it per shard.  This module owns only backend/plan selection, host→device
 topology layout, and state relabeling; all superstep logic lives in
 engine.py/exchange.py/plan.py.
 """
@@ -41,7 +48,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.agent_graph import AgentGraph, split_edge_tiles
 from repro.core.engine import DevicePartition, EngineState, GREEngine
-from repro.core.exchange import (AgentExchange, DenseExchange, NullExchange,
+from repro.core.exchange import (AgentExchange, AsyncAgentExchange,
+                                 DenseExchange, NullExchange,
                                  PipelinedAgentExchange, PipelineTiles,
                                  ShardTopology, flush_combiners,
                                  refresh_scatter_agents)
@@ -64,22 +72,43 @@ __all__ = ["DistGREEngine", "PipelineTiles", "PipelinedAgentExchange",
            "split_edge_tiles"]
 
 
+def _check_async_eligible(program: VertexProgram) -> None:
+    """Bounded staleness is sound only when delayed delivery cannot change
+    the fixed point (`VertexProgram.monotone`): min/max messages are bounds
+    that re-tighten on late arrival, but a sum-monoid message folded
+    against a stale accumulator is double-counted."""
+    if not program.monotone:
+        raise ValueError(
+            f"exchange='async' requires a monotone program (halting with "
+            f"an idempotent min/max monoid); {program.name!r} uses "
+            f"monoid={program.monoid.name!r}, halts={program.halts} — "
+            f"bounded-staleness delivery would corrupt its fixed point. "
+            f"Use exchange='agent' or 'pipelined' instead.")
+
+
 class DistGREEngine:
     """Runs a VertexProgram over an AgentGraph on a device mesh."""
 
-    EXCHANGES = ("agent", "dense", "null", "pipelined")
+    EXCHANGES = ("agent", "dense", "null", "pipelined", "async")
 
     def __init__(self, program: VertexProgram, mesh: Mesh,
                  axis_names: Tuple[str, ...] = ("graph",),
                  exchange: str = "agent", overlap: bool = False,
                  use_pallas: bool = False, frontier: str = "auto",
                  frontier_cap: Optional[int] = None,
-                 dynamic_table: bool = True, plan=None, plan_cache=None):
+                 dynamic_table: bool = True, plan=None, plan_cache=None,
+                 staleness: int = 2):
         assert exchange in self.EXCHANGES, exchange
         # NullExchange never communicates: correct only on a 1-device mesh
         # (useful to A/B the shard_map plumbing against GREEngine).
         assert exchange != "null" or mesh.size == 1, \
             "exchange='null' drops all cross-shard traffic; needs a 1-device mesh"
+        if exchange == "async":
+            _check_async_eligible(program)
+            if staleness < 1:
+                raise ValueError(
+                    f"exchange='async' needs staleness >= 1, got {staleness}")
+        self.staleness = staleness
         self.program = program
         self.mesh = mesh
         self.axes = axis_names
@@ -111,14 +140,20 @@ class DistGREEngine:
         """Take a composed SuperstepPlan mesh-wide: the frontier/kernel
         stages land on the local engine (`GREEngine.adopt_plan`) and the
         phase shape selects the exchange variant — "pipelined" switches
-        to the split-tile PipelinedAgentExchange, "sync" demotes a
-        pipelined selection back to the sync AgentExchange (dense/null
-        baselines are left alone: the plan tunes the Agent-Graph
-        protocol, not the baseline)."""
+        to the split-tile PipelinedAgentExchange, "async" to the k-deep
+        AsyncAgentExchange (monotone programs only — refuses otherwise,
+        so a tuned-cache plan can never smuggle staleness under a sum
+        monoid), "sync" demotes either back to the sync AgentExchange
+        (dense/null baselines are left alone: the plan tunes the
+        Agent-Graph protocol, not the baseline)."""
         self.local.adopt_plan(plan)
         if plan.phases == "pipelined":
             self.exchange = "pipelined"
-        elif self.exchange == "pipelined":
+        elif plan.phases == "async":
+            _check_async_eligible(self.program)
+            self.exchange = "async"
+            self.staleness = plan.staleness
+        elif self.exchange in ("pipelined", "async"):
             self.exchange = "agent"
 
     def _resolve_auto_plan(self, ag: AgentGraph) -> None:
@@ -146,6 +181,9 @@ class DistGREEngine:
         will drive).  Rebuilt from the local engine on access so a
         `calibrate_frontier_cap` run between construction and `make_run`
         is honored (matching `GREEngine.make_plan`)."""
+        if self.exchange == "async":
+            return self.local.make_plan(phases="async",
+                                        staleness=self.staleness)
         return self.local.make_plan(
             phases="pipelined" if self.exchange == "pipelined" else "sync")
 
@@ -163,6 +201,10 @@ class DistGREEngine:
             return PipelinedAgentExchange(topo, self.axes,
                                           self.program.monoid,
                                           dense_frontier=self.local.dense_frontier)
+        if self.exchange == "async":
+            return AsyncAgentExchange(topo, self.axes, self.program.monoid,
+                                      dense_frontier=self.local.dense_frontier,
+                                      staleness=self.staleness)
         return AgentExchange(topo, self.axes, self.program.monoid,
                              dense_frontier=self.local.dense_frontier,
                              overlap=self.overlap)
@@ -171,19 +213,19 @@ class DistGREEngine:
     def device_topology(self, ag: AgentGraph):
         """Stacked arrays [k, ...]; shard_map splits row i to device i.
 
-        With `exchange="pipelined"` every edge scan runs on the split tiles
-        (`ShardTopology.tiles`); the canonical part then carries NO edge
-        columns at all (`DevicePartition` edge columns are optional) —
-        only the slot statics + aux that apply needs.  Shipping the full
-        columns twice would double per-device edge memory for arrays the
-        pipelined path never reads.
+        With `exchange="pipelined"` or `exchange="async"` every edge scan
+        runs on the split tiles (`ShardTopology.tiles`); the canonical part
+        then carries NO edge columns at all (`DevicePartition` edge columns
+        are optional) — only the slot statics + aux that apply needs.
+        Shipping the full columns twice would double per-device edge
+        memory for arrays the split-tile paths never read.
         """
         if self._auto_plan_pending:
             self._resolve_auto_plan(ag)
         aux = {"out_degree": jnp.asarray(ag.out_degree),
                "global_id": jnp.asarray(
                    ag.new2old.reshape(ag.k, ag.cap).astype(np.float32))}
-        if self.exchange == "pipelined":
+        if self.exchange in ("pipelined", "async"):
             part = DevicePartition(
                 num_masters=ag.cap, num_slots=ag.num_slots,
                 edges_sorted_by_dst=True, aux=aux,
@@ -427,7 +469,18 @@ class DistGREEngine:
         retired query, so the pipelined backend still overlaps its flush
         with the local-tile combine INSIDE the tick but never defers the
         merge past it) and globalizes the per-lane halt vector with a
-        pmax, keeping `lane_active` replicated and host-readable."""
+        pmax, keeping `lane_active` replicated and host-readable.
+
+        `exchange="async"` cannot serve ticks: its ring holds remote
+        partials for up to `staleness` supersteps, and dropping them at a
+        tick boundary would lose messages outright (not merely defer
+        them)."""
+        if self.exchange == "async":
+            raise ValueError(
+                "exchange='async' cannot drive the serving tick: the "
+                "staleness ring carries un-flushed remote partials across "
+                "supersteps, and a per-tick merge would drop them. Use "
+                "exchange='agent' or 'pipelined' for serving.")
         if self._auto_plan_pending:
             self._resolve_auto_plan(ag)
         spec_leading = P(self.axes if len(self.axes) > 1 else self.axes[0])
@@ -457,9 +510,12 @@ class DistGREEngine:
         spec_leading = P(self.axes if len(self.axes) > 1 else self.axes[0])
         squeeze0, unsqueeze0 = _squeeze0, _unsqueeze0
 
-        def glob_any(s):
-            any_active = jnp.any(s.active_scatter)
-            return jax.lax.pmax(any_active.astype(jnp.int32), self.axes) > 0
+        def glob_any(local):
+            # Globalizer over the shard-local liveness bool (frontier OR
+            # in-flight exchange carry — see plan.execute_plan): the pmax
+            # keeps the loop predicate mesh-uniform so collectives inside
+            # the phase stay matched across shards.
+            return jax.lax.pmax(local.astype(jnp.int32), self.axes) > 0
 
         def run_shard(topo_stack, state_stack):
             topo_l = squeeze0(topo_stack)

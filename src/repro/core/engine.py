@@ -170,7 +170,8 @@ class DevicePartition:
         from repro.graph.structures import (DEFAULT_BUCKET_BOUNDS,
                                             DeltaReport, csr_layout,
                                             degree_buckets, removal_selector,
-                                            sort_edges_by_dst)
+                                            sort_edges_by_dst,
+                                            validate_edge_delta)
         assert self.src is not None, \
             "tile-only partition carries no edge columns to mutate"
         n, slots = self.num_masters, self.num_slots
@@ -179,16 +180,20 @@ class DevicePartition:
         dst = np.asarray(self.dst)
         mask = np.asarray(self.edge_mask)
         props = {k: np.asarray(v) for k, v in self.edge_props.items()}
+        # ---- validate up front (single-shard layout: master slot == the
+        # original vertex id, so slot-space keys ARE original-id keys)
+        validate_edge_delta(
+            delta, n,
+            live_keys=(src[mask].astype(np.int64) * np.int64(n) +
+                       dst[mask].astype(np.int64)))
         # ---- retire: every live instance of each removed (src, dst) pair
         rem = removal_selector(src.astype(np.int64), dst.astype(np.int64),
                                delta.rem_src, delta.rem_dst, slots) & mask
         removed_src = src[rem].astype(np.int64)
         removed_dst = dst[rem].astype(np.int64)
         keep = mask & ~rem
-        # ---- validate + stage adds
+        # ---- stage adds
         if delta.num_adds:
-            hi = int(max(delta.add_src.max(), delta.add_dst.max()))
-            assert hi < n, (hi, n)
             for k in props:
                 if k not in delta.add_props:
                     raise KeyError(f"delta adds missing edge prop {k!r}")
@@ -422,16 +427,19 @@ class GREEngine:
             self.adopt_plan(plan)
         return True
 
-    def make_plan(self, phases: str = "sync") -> SuperstepPlan:
+    def make_plan(self, phases: str = "sync",
+                  staleness: int = 0) -> SuperstepPlan:
         """The engine's SuperstepPlan (repro.core.plan): frontier strategy
         request + kernel stage.  `phases` RECORDS the exchange phase shape
-        so the composed mode is inspectable as one static object (the
-        executor itself drives whichever shape the backend's phase
-        protocol implements — see `plan.execute_plan`).  Rebuilt on
-        demand so `calibrate_frontier_cap`'s capacity update is honored."""
+        (with `staleness` = the async ring depth k, 0 otherwise) so the
+        composed mode is inspectable as one static object (the executor
+        itself drives whichever shape the backend's phase protocol
+        implements — see `plan.execute_plan`).  Rebuilt on demand so
+        `calibrate_frontier_cap`'s capacity update is honored."""
         return SuperstepPlan(
             strategy=self.frontier, frontier_cap=self.frontier_cap,
             dense_frontier=self.dense_frontier, phases=phases,
+            staleness=staleness,
             kernel=KernelPlan(use_pallas=self.use_pallas,
                               dynamic_table=self.dynamic_table))
 

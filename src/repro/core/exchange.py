@@ -24,6 +24,19 @@ partial combines cross device boundaries.  This module isolates that seam:
                    ride a two-slot `Mailbox` so the merge can be deferred to
                    the top of the NEXT superstep (the plan executor,
                    `repro.core.plan.execute_plan`).
+  AsyncAgentExchange — bounded-staleness execution for MONOTONE programs
+                   (`VertexProgram.monotone`: halting ⊕ = min/max): the
+                   Mailbox generalizes to a k-deep ring of remote-tile
+                   partials, the scatter refresh and combiner flush
+                   collectives run once per k supersteps instead of every
+                   superstep, and local updates keep applying eagerly in
+                   between — each shard runs up to `staleness_bound = k`
+                   supersteps ahead on stale remote state.  The fixed
+                   point matches the synchronous schedule exactly
+                   (delayed delivery of a valid min/max bound only
+                   re-tightens later); the trajectory does not, which is
+                   why non-monotone (sum) programs must refuse this
+                   backend.
 
 All backends speak first-class feature-vector payloads: state and message
 arrays are `[slots, *payload_shape]`; scalars are the `payload_shape=()`
@@ -88,6 +101,29 @@ class Mailbox:
 
     local: jnp.ndarray    # [num_masters + 1, *payload]
     flushed: jnp.ndarray  # [num_masters + 1, *payload]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AsyncRing:
+    """k-deep generalization of `Mailbox` for bounded-staleness supersteps.
+
+    `ring[i]` holds the remote-tile partial ⊕ (compact combiner space)
+    produced at the superstep with `step % k == i`; at the window boundary
+    (`step % k == k - 1`) all k entries ⊕-fold and flush in ONE collective,
+    landing in `landed` for the next merge, and the ring resets to
+    identity.  `local` is the eager local-tile partial (merged every
+    superstep).  `dirty` records whether any master improved since the
+    last scatter refresh — in-flight information the termination predicate
+    must count: a shard is quiescent only when its frontier is empty AND
+    every ring entry is identity AND no un-refreshed improvement is held
+    (`AsyncAgentExchange.carry_pending`).
+    """
+
+    local: jnp.ndarray    # [num_masters + 1, *payload]
+    landed: jnp.ndarray   # [num_masters + 1, *payload]
+    ring: jnp.ndarray     # [k, num_combiners + 1, *payload]
+    dirty: jnp.ndarray    # scalar bool: master improved since last refresh
 
 
 @jax.tree_util.register_dataclass
@@ -170,12 +206,18 @@ class ExchangeBackend(Protocol):
 
     Every backend additionally speaks the PHASE protocol the plan executor
     drives (`repro.core.plan.execute_plan`): `local_phase` produces a
-    per-superstep carry, `merge` folds it into the combined array apply
-    consumes, and `carry_init` builds the carry's identity-valued shape
-    placeholder for the loop seed.  `phases` names the shape ("sync": the
-    carry IS the reduce output and merge is the identity; "pipelined": the
-    carry is a two-slot `Mailbox` whose flush collective overlaps the next
-    local combine).
+    per-superstep carry (receiving the PREVIOUS carry, which only the
+    async shape reads — its ring persists across supersteps), `merge`
+    folds it into the combined array apply consumes, `carry_init` builds
+    the carry's identity-valued shape placeholder for the loop seed, and
+    `carry_pending` reports whether the carry still holds in-flight
+    contributions the termination predicate must wait for (identity-False
+    for sync/pipelined: their carries are fully consumed by the very next
+    merge).  `phases` names the shape ("sync": the carry IS the reduce
+    output and merge is the identity; "pipelined": the carry is a two-slot
+    `Mailbox` whose flush collective overlaps the next local combine;
+    "async": the carry is a k-deep `AsyncRing` flushed once per k
+    supersteps).
     """
 
     phases: str
@@ -186,11 +228,13 @@ class ExchangeBackend(Protocol):
                state: "EngineState") -> jnp.ndarray: ...
 
     def local_phase(self, engine: "GREEngine", part: "DevicePartition",
-                    state: "EngineState"): ...
+                    state: "EngineState", carry=None): ...
 
     def merge(self, carry) -> jnp.ndarray: ...
 
     def carry_init(self, engine: "GREEngine", part: "DevicePartition"): ...
+
+    def carry_pending(self, carry) -> jnp.ndarray: ...
 
 
 class _SyncPhase:
@@ -201,7 +245,7 @@ class _SyncPhase:
 
     phases = "sync"
 
-    def local_phase(self, engine, part, state):
+    def local_phase(self, engine, part, state, carry=None):
         return self.reduce(engine, part, state)
 
     def merge(self, carry):
@@ -211,6 +255,11 @@ class _SyncPhase:
         p = engine.program
         return jnp.full((part.num_slots,) + tuple(p.payload_shape),
                         p.monoid.identity, p.msg_dtype)
+
+    def carry_pending(self, carry):
+        # sync/pipelined carries are fully consumed by the next merge:
+        # nothing in them can outlive the frontier-emptiness check
+        return jnp.zeros((), dtype=bool)
 
 
 class NullExchange(_SyncPhase):
@@ -369,7 +418,7 @@ class PipelinedAgentExchange(_RefreshingExchange):
         self.tiles = topo.tiles
 
     def local_phase(self, engine: "GREEngine", part: "DevicePartition",
-                    state: "EngineState") -> Mailbox:
+                    state: "EngineState", carry=None) -> Mailbox:
         """Remote-tile combine + flush issue, then local-tile combine.
 
         The flush is `flush_combiners` with the compact-space indices: the
@@ -403,3 +452,153 @@ class PipelinedAgentExchange(_RefreshingExchange):
 
     def reduce(self, engine, part, state):
         return self.merge(self.local_phase(engine, part, state))
+
+
+class AsyncAgentExchange(_RefreshingExchange):
+    """Bounded-staleness Agent-Graph exchange: collectives once per k steps.
+
+    Valid ONLY for monotone programs (`VertexProgram.monotone`: halting
+    ⊕ = min/max) — every message is a valid bound computed by the same ops
+    the synchronous schedule would run, so delaying its delivery changes
+    the trajectory but not the unique fixed point.  The engine refuses to
+    construct this backend for sum-monoid programs (a partial folded
+    against a stale accumulator is double-counted, not re-tightened).
+
+    Protocol per superstep, over the same static ingress edge split as
+    the pipelined backend (`ShardTopology.tiles`), with
+    `staleness_bound = k`:
+
+      refresh      — the scatter-agent refresh collective runs only at
+                     `step % k == 0`; in between, shards scatter from the
+                     STALE agent copies.  Because a master's activity flag
+                     clears one superstep after it improves, the refresh
+                     re-derives agent activity from VALUE CHANGE (received
+                     copy != held copy): any improvement since the last
+                     refresh — whenever it happened inside the window —
+                     scatters exactly once after landing.
+      local_phase  — the remote-tile partial is ⊕-combined EVERY superstep
+                     into ring slot `step % k`; at the window boundary
+                     (`step % k == k - 1`) the k ring entries ⊕-fold and
+                     flush in ONE collective (1/k of the pipelined
+                     backend's flush traffic), landing for the next merge;
+                     the local-tile partial is computed every superstep
+                     and merged eagerly — intra-shard propagation runs at
+                     full speed, only shard crossings wait (≤ k - 1
+                     supersteps in the ring + ≤ k - 1 until the next
+                     refresh).
+      merge        — `local ⊕ landed`, every superstep (landed is identity
+                     except just after a boundary flush).
+
+    Both `step % k` predicates are mesh-uniform (superstep counters
+    advance in lockstep inside `plan.execute_plan`'s while-loop), so the
+    collectives under their `lax.cond`s stay matched across shards — the
+    same discipline as the executor's own continuation cond.
+
+    Termination counts the in-flight state (`carry_pending`): a shard is
+    quiescent only when its frontier is empty AND all k ring entries are
+    identity AND no master improved since the last refresh (`dirty`) —
+    without the last term an improvement whose only cross-shard readers
+    are scatter agents on OTHER shards could be stranded between
+    refreshes.  `k = 1` degenerates to the pipelined cadence with an
+    eager local merge.
+    """
+
+    phases = "async"
+
+    def __init__(self, topo: ShardTopology, axes, monoid: Monoid,
+                 dense_frontier: bool = False, staleness: int = 2):
+        super().__init__(topo, axes, monoid, dense_frontier)
+        assert topo.tiles is not None, \
+            "AsyncAgentExchange needs ShardTopology.tiles " \
+            "(agent_graph.split_edge_tiles)"
+        assert staleness >= 1, staleness
+        self.tiles = topo.tiles
+        self.staleness = staleness
+
+    def refresh(self, state):
+        from repro.core.engine import EngineState
+
+        def do(s):
+            old_sd = s.scatter_data
+            sd, act = refresh_scatter_agents(self.topo, s.scatter_data,
+                                             s.active_scatter, self.axes,
+                                             dense=self.dense_frontier)
+            if not self.dense_frontier:
+                # value-change activation: masters that improved mid-window
+                # have long-cleared activity flags, but the agents still
+                # hold the previous refresh's copy, so != finds them.  Only
+                # agent slots can differ (refresh writes nothing else).
+                changed = sd != old_sd
+                if changed.ndim > 1:
+                    changed = jnp.any(
+                        changed, axis=tuple(range(1, changed.ndim)))
+                act = act | changed
+            return EngineState(s.vertex_data, sd, act, s.step,
+                               s.lane_active)
+
+        return jax.lax.cond(state.step % self.staleness == 0,
+                            do, lambda s: s, state)
+
+    def local_phase(self, engine: "GREEngine", part: "DevicePartition",
+                    state: "EngineState", carry=None) -> AsyncRing:
+        assert carry is not None, \
+            "async local_phase needs the prior AsyncRing carry " \
+            "(driven by plan.execute_plan; the serving tick refuses async)"
+        t = self.tiles
+        k = self.staleness
+        masters = self.topo.part.num_masters
+        remote = engine.scatter_combine(t.part_remote, state,
+                                        num_segments=t.num_combiners + 1)
+        slot = state.step % k
+        ring = jax.lax.dynamic_update_index_in_dim(carry.ring, remote,
+                                                   slot, axis=0)
+
+        def flush(r):
+            folded = r[0]
+            for i in range(1, k):
+                folded = self.monoid.op(folded, r[i])
+            landed = flush_combiners(self.topo, folded, self.axes,
+                                     self.monoid,
+                                     send_slot=t.comb_send_compact,
+                                     recv_master=t.comb_recv_master,
+                                     num_segments=masters + 1)
+            return landed, jnp.full_like(r, self.monoid.identity)
+
+        def hold(r):
+            idm = jnp.full((masters + 1,) + r.shape[2:],
+                           self.monoid.identity, r.dtype)
+            return idm, r
+
+        landed, ring = jax.lax.cond(slot == k - 1, flush, hold, ring)
+        local = engine.scatter_combine(t.part_local, state,
+                                       num_segments=masters + 1)
+        # improvements land on masters as activity the superstep after
+        # they happen; at a refresh step everything so far was just pushed
+        dirty = jnp.where(state.step % k == 0, False,
+                          carry.dirty
+                          | jnp.any(state.active_scatter[:masters]))
+        return AsyncRing(local=local, landed=landed, ring=ring, dirty=dirty)
+
+    def merge(self, carry: AsyncRing) -> jnp.ndarray:
+        return self.monoid.op(carry.local, carry.landed)
+
+    def carry_init(self, engine, part):
+        p = engine.program
+        masters = self.topo.part.num_masters
+        payload = tuple(p.payload_shape)
+        idm = jnp.full((masters + 1,) + payload, p.monoid.identity,
+                       p.msg_dtype)
+        ring = jnp.full((self.staleness, self.tiles.num_combiners + 1)
+                        + payload, p.monoid.identity, p.msg_dtype)
+        return AsyncRing(local=idm, landed=idm, ring=ring,
+                         dirty=jnp.zeros((), dtype=bool))
+
+    def carry_pending(self, carry: AsyncRing) -> jnp.ndarray:
+        return jnp.any(carry.ring != self.monoid.identity) | carry.dirty
+
+    def reduce(self, engine, part, state):
+        raise NotImplementedError(
+            "AsyncAgentExchange has no single-superstep reduce: partials "
+            "live in the k-deep ring across supersteps.  Use the plan "
+            "executor (DistGREEngine.make_run); the serving tick refuses "
+            "exchange='async'.")

@@ -74,6 +74,11 @@ def greedy_partition(graph: Graph, k: int, batch_size: int = 256,
                    ne=np.zeros(k, dtype=np.int64)) for _ in range(num_loaders)]
     rngs = [np.random.default_rng(seed + i) for i in range(num_loaders)]
     cursors = [int(bounds[i]) for i in range(num_loaders)]
+    # coordinated mode: the load state already replicated into every loader
+    # at the last sync — subtracted at the next merge so replicas are not
+    # double-counted (each loader's ne = last merged global + its own new
+    # placements; summing L copies holds the merged baseline L times).
+    merged_ne = np.zeros(k, dtype=np.int64)
     n_batch = 0
     active = True
     while active:
@@ -102,14 +107,31 @@ def greedy_partition(graph: Graph, k: int, batch_size: int = 256,
             cursors[li] = hi
         n_batch += 1
         if sync_every and num_loaders > 1 and n_batch % sync_every == 0:
-            # coordinated mode: merge heuristic state across loaders
-            hs = np.logical_or.reduce([s["has_src"] for s in states])
-            hd = np.logical_or.reduce([s["has_dst"] for s in states])
-            ne = np.sum([s["ne"] for s in states], axis=0) // num_loaders
-            for s in states:
-                s["has_src"], s["has_dst"] = hs.copy(), hd.copy()
-                s["ne"] = ne.copy()
+            merged_ne = merge_loader_states(states, merged_ne, num_loaders)
     return part
+
+
+def merge_loader_states(states, merged_ne: np.ndarray,
+                        num_loaders: int) -> np.ndarray:
+    """Coordinated-mode sync point: merge the loaders' greedy heuristic
+    state in place and return the new merged load baseline.
+
+    The OR-merge of has_src/has_dst is idempotent, but the load term must
+    recover the TRUE global per-partition edge count: each loader's `ne`
+    is the baseline replicated at the previous sync plus its own new
+    placements, so summing the copies holds the baseline `num_loaders`
+    times — subtract the surplus.  (The old `sum // num_loaders` shortcut
+    instead shrank the counts L-fold, compressing the balance term's
+    (Max - Ne) spread and mis-weighting it against edge affinity.)
+    """
+    hs = np.logical_or.reduce([s["has_src"] for s in states])
+    hd = np.logical_or.reduce([s["has_dst"] for s in states])
+    ne = (np.sum([s["ne"] for s in states], axis=0)
+          - (num_loaders - 1) * merged_ne)
+    for s in states:
+        s["has_src"], s["has_dst"] = hs.copy(), hd.copy()
+        s["ne"] = ne.copy()
+    return ne
 
 
 def assign_owners(graph: Graph, edge_part: np.ndarray, k: int) -> np.ndarray:
@@ -127,10 +149,22 @@ def assign_owners(graph: Graph, edge_part: np.ndarray, k: int) -> np.ndarray:
 
 def rebalance_owners(owner: np.ndarray, k: int, cap: int) -> np.ndarray:
     """Cap masters per partition at `cap` by moving overflow vertices to the
-    least-loaded partitions (keeps XLA shapes uniform)."""
+    least-loaded partitions (keeps XLA shapes uniform).
+
+    Infeasible inputs (more vertices than `k * cap` total capacity) raise a
+    clear ValueError up front instead of crashing mid-move on an exhausted
+    receiver list; with feasible inputs an over-cap partition always implies
+    some partition below cap, so the move loop cannot strand.  Ties among
+    equally-loaded receivers break to the lowest partition id.
+    """
     owner = owner.copy()
     counts = np.bincount(owner, minlength=k)
+    if int(counts.sum()) > k * cap:
+        raise ValueError(
+            f"cannot rebalance {int(counts.sum())} vertices into {k} "
+            f"partitions of cap {cap} ({k * cap} total slots)")
     over = [i for i in range(k) if counts[i] > cap]
+    # ascending order → `min` ties break to the lowest partition id
     under = [i for i in range(k) if counts[i] < cap]
     for i in over:
         vs = np.flatnonzero(owner == i)[cap:]

@@ -43,7 +43,7 @@ import jax.numpy as jnp
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids a cycle
     from repro.core.engine import DevicePartition, EngineState, GREEngine
 
-PHASES = ("sync", "pipelined")
+PHASES = ("sync", "pipelined", "async")
 
 
 class FrontierPlan(NamedTuple):
@@ -136,9 +136,20 @@ class SuperstepPlan:
     phases: str = "sync"
     kernel: KernelPlan = XLA_KERNEL
     bucket_bounds: Optional[tuple] = None
+    # Bounded-staleness window k for phases="async" (the AsyncAgentExchange
+    # ring depth; exchange collectives run once per k supersteps).  0 for
+    # the synchronous shapes — a non-zero staleness on a sync/pipelined
+    # plan would silently record a knob nothing executes.
+    staleness: int = 0
 
     def __post_init__(self):
         assert self.phases in PHASES, self.phases
+        if self.phases == "async" and self.staleness < 1:
+            raise ValueError("phases='async' needs staleness >= 1 "
+                             f"(got {self.staleness})")
+        if self.phases != "async" and self.staleness != 0:
+            raise ValueError(f"staleness={self.staleness} is only "
+                             "meaningful with phases='async'")
         if self.bucket_bounds is not None:
             # normalize to a hashable int tuple (JSON round-trips lists)
             object.__setattr__(self, "bucket_bounds",
@@ -158,6 +169,7 @@ class SuperstepPlan:
                        "dynamic_table": self.kernel.dynamic_table},
             "bucket_bounds": (None if self.bucket_bounds is None
                               else list(self.bucket_bounds)),
+            "staleness": self.staleness,
         }
 
     @classmethod
@@ -168,7 +180,7 @@ class SuperstepPlan:
         (the cache stores a schema version too, but field-level rejection
         catches hand-edited files)."""
         known = {"strategy", "frontier_cap", "dense_frontier", "phases",
-                 "kernel", "bucket_bounds"}
+                 "kernel", "bucket_bounds", "staleness"}
         unknown = set(data) - known
         if unknown:
             raise ValueError(f"SuperstepPlan.from_json: unknown field(s) "
@@ -188,7 +200,8 @@ class SuperstepPlan:
                    dense_frontier=bool(data.get("dense_frontier", False)),
                    phases=data.get("phases", "sync"),
                    kernel=kernel,
-                   bucket_bounds=None if bounds is None else tuple(bounds))
+                   bucket_bounds=None if bounds is None else tuple(bounds),
+                   staleness=int(data.get("staleness", 0)))
 
     def frontier(self, part: "DevicePartition") -> FrontierPlan:
         return resolve_frontier(self.strategy, self.frontier_cap,
@@ -273,34 +286,46 @@ def execute_plan(engine: "GREEngine", part: "DevicePartition",
     `apply_i`.  ⊕-equivalence is exact either way: the same partial
     combines are folded, only later.
 
-    `any_active` overrides the termination predicate (the distributed
-    engine passes the mesh-global pmax so all shards exit together and the
-    collectives inside the phase stay matched).  The predicate is computed
-    once per iteration (post-apply, carried into the loop cond) and is
-    mesh-uniform, so every shard takes the same branch.  Evaluating it on
-    the pre-refresh state is sound: apply zeroes agent-slot activity, so
-    the global any over masters is what refresh would mirror.
+    `any_active` GLOBALIZES the termination predicate: it receives the
+    shard-local "still work here" bool (frontier non-empty OR the
+    backend's carry still holds in-flight contributions,
+    `exchange.carry_pending`) and returns the mesh-global verdict — the
+    distributed engine passes a pmax so all shards exit together and the
+    collectives inside the phase stay matched; None is the single-shard
+    identity.  The predicate is computed once per iteration (post-apply,
+    carried into the loop cond) and is mesh-uniform, so every shard takes
+    the same branch.  Evaluating it on the pre-refresh state is sound:
+    apply zeroes agent-slot activity, so the global any over masters is
+    what refresh would mirror.  Counting the carry matters only for the
+    async shape: its ring holds remote partials flushed once per k
+    supersteps, and its `dirty` bit holds improvements the next refresh
+    has yet to push — an empty frontier with either set is not
+    quiescence.  (The landed/local slots never need counting: merge
+    consumes them before the predicate runs.)
     """
-    anyfn = any_active or (lambda s: jnp.any(s.active_scatter))
+    globalize = any_active or (lambda local: local)
+    pending = getattr(exchange, "carry_pending",
+                      lambda carry: jnp.zeros((), dtype=bool))
 
-    def keep_going(s):
-        return (s.step < max_steps) & anyfn(s)
+    def keep_going(s, carry):
+        local = jnp.any(s.active_scatter) | pending(carry)
+        return (s.step < max_steps) & globalize(local)
 
-    def phase(s):
+    def phase(s, carry):
         s = exchange.refresh(s)
-        return s, exchange.local_phase(engine, part, s)
+        return s, exchange.local_phase(engine, part, s, carry)
 
     def phase_if(go, s, carry):
-        return jax.lax.cond(go, phase, lambda ss: (ss, carry), s)
+        return jax.lax.cond(go, phase, lambda ss, cc: (ss, cc), s, carry)
 
     def body(c):
         s, carry, _ = c
         s = engine.apply(part, s, exchange.merge(carry))
-        go = keep_going(s)
+        go = keep_going(s, carry)
         return phase_if(go, s, carry) + (go,)
 
-    go0 = keep_going(state)
-    carry0 = phase_if(go0, state,
-                      exchange.carry_init(engine, part)) + (go0,)
+    carry_init = exchange.carry_init(engine, part)
+    go0 = keep_going(state, carry_init)
+    carry0 = phase_if(go0, state, carry_init) + (go0,)
     final, _, _ = jax.lax.while_loop(lambda c: c[2], body, carry0)
     return final

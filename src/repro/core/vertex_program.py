@@ -179,6 +179,20 @@ class VertexProgram:
     # result (default: column `vertex_data[:, lane]`; PPR stores (p, r)
     # pairs and views the estimate).
     lane_view: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
+
+    @property
+    def monotone(self) -> bool:
+        """Whether delayed/re-ordered message delivery cannot change the
+        fixed point: every message under an idempotent select monoid
+        (⊕ = min/max) is a valid bound that a later delivery only
+        re-tightens, so bounded-staleness execution
+        (`exchange="async"`, repro.core.exchange.AsyncAgentExchange)
+        converges to the same values as the synchronous schedule.  True
+        for the halting label-correcting traversals (BFS/SSSP/CC); False
+        for sum-monoid programs (PageRank/PPR/GNN aggregation), where a
+        message folded against a stale accumulator is double-counted —
+        those must refuse async execution loudly."""
+        return self.halts and self.monoid.name in ("min", "max")
     # ------------------------------------------------------------ incremental
     # Removal-invalidation policy for warm-started re-convergence after an
     # edge delta (repro.core.incremental):

@@ -63,6 +63,11 @@ class Graph:
         `agent_graph.apply_edge_delta`) must agree with rebuilding from
         this graph — the mutation conformance suite checks exactly that.
         """
+        validate_edge_delta(
+            delta, self.num_vertices,
+            live_keys=(self.src.astype(np.int64) *
+                       np.int64(self.num_vertices) +
+                       self.dst.astype(np.int64)))
         rem = removal_selector(self.src, self.dst, delta.rem_src,
                                delta.rem_dst, self.num_vertices)
         keep = ~rem
@@ -75,9 +80,6 @@ class Graph:
                                     np.asarray(delta.add_props[k], v.dtype)
                                     if delta.num_adds else v[:0]])
                  for k, v in self.edge_props.items()}
-        if delta.num_adds:
-            hi = int(max(delta.add_src.max(), delta.add_dst.max()))
-            assert hi < self.num_vertices, (hi, self.num_vertices)
         return Graph(self.num_vertices, src, dst, props,
                      dict(self.vertex_props))
 
@@ -96,11 +98,13 @@ class Graph:
 class EdgeDelta:
     """A batch of edge mutations in ORIGINAL vertex ids (docs/incremental.md).
 
-    `removes` retire every live instance of each (src, dst) pair (pairs not
-    present are ignored); `adds` append unconditionally (multi-edges are
-    allowed, matching `Graph`'s COO semantics).  `add_props` must supply a
-    column for every edge property the target graph carries — zero-filling
-    a weight would silently create zero-cost edges.
+    `removes` retire every live instance of each (src, dst) pair — a pair
+    matching NO live edge is rejected up front (`validate_edge_delta`), as
+    are out-of-range ids and within-batch duplicate add rows; `adds` append
+    otherwise unconditionally (multi-edges across batches stay legal,
+    matching `Graph`'s COO semantics).  `add_props` must supply a column
+    for every edge property the target graph carries — zero-filling a
+    weight would silently create zero-cost edges.
     """
 
     add_src: np.ndarray = None
@@ -157,6 +161,64 @@ class DeltaReport:
     @property
     def num_removed(self) -> int:
         return int(self.removed_src.shape[0])
+
+
+def _offending(rows: np.ndarray, limit: int = 8) -> str:
+    shown = ", ".join(str(int(r)) for r in rows[:limit])
+    more = f", ... ({rows.shape[0]} total)" if rows.shape[0] > limit else ""
+    return shown + more
+
+
+def validate_edge_delta(delta: "EdgeDelta", num_vertices: int,
+                        live_keys: Optional[np.ndarray] = None) -> None:
+    """Up-front `EdgeDelta` validation shared by every delta-ingress path
+    (`Graph.apply_edge_delta`, `DevicePartition.apply_edge_delta`,
+    `agent_graph.apply_edge_delta`), so malformed batches fail loudly with
+    the offending ROW INDICES instead of surfacing as numpy fancy-index
+    errors (out-of-range ids), silent multi-edges (a duplicated add row is
+    near-always a batch-construction bug; legitimate parallel edges arrive
+    in separate batches), or silent no-op masks (a removal matching no live
+    edge — already tombstoned, or never existed).
+
+    `live_keys` is the caller's pre-delta live edge set as `src * V + dst`
+    int64 keys in ORIGINAL vertex ids (None skips the liveness check).
+    All three paths validate identically, so a delta that raises on the
+    single-shard partition raises the same way on the mesh.
+    """
+    V = np.int64(num_vertices)
+    for label, ids in (("add_src", delta.add_src),
+                       ("add_dst", delta.add_dst),
+                       ("rem_src", delta.rem_src),
+                       ("rem_dst", delta.rem_dst)):
+        bad = np.flatnonzero((ids < 0) | (ids >= V))
+        if bad.size:
+            raise ValueError(
+                f"EdgeDelta.{label} has out-of-range vertex ids at rows "
+                f"[{_offending(bad)}]: values "
+                f"[{_offending(ids[bad])}] outside [0, {num_vertices})")
+    if delta.num_adds:
+        keys = delta.add_src * V + delta.add_dst
+        _, first, counts = np.unique(keys, return_index=True,
+                                     return_counts=True)
+        if np.any(counts > 1):
+            dup_mask = np.ones(keys.shape[0], dtype=bool)
+            dup_mask[first] = False
+            dup = np.flatnonzero(dup_mask)
+            raise ValueError(
+                f"EdgeDelta add batch repeats (src, dst) pairs at rows "
+                f"[{_offending(dup)}] — duplicate rows in one batch are "
+                f"almost always a construction bug; submit parallel edges "
+                f"in separate deltas")
+    if delta.num_removes and live_keys is not None:
+        rem_keys = delta.rem_src * V + delta.rem_dst
+        dead = np.flatnonzero(~np.isin(rem_keys, live_keys))
+        if dead.size:
+            pairs = [f"({int(delta.rem_src[r])}, {int(delta.rem_dst[r])})"
+                     for r in dead[:8]]
+            raise ValueError(
+                f"EdgeDelta removal rows [{_offending(dead)}] match no "
+                f"live edge (already tombstoned or never present): "
+                f"{', '.join(pairs)}")
 
 
 def removal_selector(src: np.ndarray, dst: np.ndarray, rem_src: np.ndarray,

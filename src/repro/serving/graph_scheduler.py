@@ -75,10 +75,17 @@ class Query:
 
 
 def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile over an ALREADY-SORTED sequence
+    (numpy's default ``method="linear"``).  The nearest-rank shortcut this
+    replaces rounded `q*(n-1)` to an index, which collapses p95 to the max
+    for n ≲ 20 samples and misreports it at most other sizes."""
     if not sorted_vals:
         return float("nan")
-    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
-    return float(sorted_vals[i])
+    pos = q * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return float(sorted_vals[lo]) * (1.0 - frac) + float(sorted_vals[hi]) * frac
 
 
 def poisson_ticks(num_queries: int, rate_per_tick: float,
@@ -132,6 +139,11 @@ class GraphQueryBatcher:
             self._admit_fn = self._make_admit(target)
             self.state = engine.init_state(
                 target, source=[None] * self.num_lanes, lane_tracking=True)
+        # After init_state/device_topology: any plan="auto-tuned" cache hit
+        # has been adopted by now, and the jitted tick/admit fns above trace
+        # lazily on first call — so the clamp below still lands before any
+        # trace reads the frontier knobs.
+        self._clamp_sum_monoid_plan()
         self.queue: deque = deque()
         self.finished: List[Query] = []
         self._lane_query: List[Optional[Query]] = [None] * self.num_lanes
@@ -141,6 +153,32 @@ class GraphQueryBatcher:
         self.supersteps = 0
         self._busy_lane_ticks = 0
         self._first_submit: Optional[float] = None
+
+    def _clamp_sum_monoid_plan(self) -> None:
+        """Pin sum-monoid programs (PPR et al.) to the dense-frontier plan.
+
+        Recycled-lane bitwise equality for fp sums needs an
+        ORDER-INDEPENDENT schedule: the dense every-edge scan visits edges
+        in one fixed order every superstep, so a recycled lane accumulates
+        the exact float sequence a fresh batch would.  A compacted frontier
+        reorders message delivery by frontier occupancy — which depends on
+        which OTHER queries share the batch — silently breaking that
+        equality.  The engine's own default pins this, but a
+        `plan="auto-tuned"` cache hit or an explicit `adopt_plan` call can
+        hand the batcher a compacted plan (tuned on some sparse-frontier
+        scenario); clamp it back before any tick function traces.
+
+        Only the frontier STRATEGY is clamped — the masked dense scan is
+        already order-fixed.  `dense_frontier` (skip activity masks
+        entirely) is a semantic knob owned by the program: forcing it on a
+        halting program like PPR push breaks lane retirement, so it is
+        reset to the program's own default instead."""
+        if self.program.monoid.name != "sum":
+            return
+        local = self.engine.local if self._dist else self.engine
+        local.frontier = "dense"
+        local.frontier_cap = None
+        local.dense_frontier = not self.program.halts
 
     # ------------------------------------------------------------ jitted fns
     def _make_tick(self, part):
@@ -432,6 +470,10 @@ class GraphQueryBatcher:
             self.state = self.engine.init_state(
                 self._part, source=[None] * self.num_lanes,
                 lane_tracking=True)
+        # refresh_plan / re-keyed cache hits can adopt a compacted plan for
+        # the mutated graph; sum-monoid lanes must stay dense (see
+        # `_clamp_sum_monoid_plan`).
+        self._clamp_sum_monoid_plan()
 
     def _local_src(self, source: int):
         """Original vertex id → admit-operand encoding: the local slot

@@ -121,7 +121,8 @@ def tune(program, graph, *, source=0, cache=None,
     dense = default_plan.dense_frontier
     cands = list(space.candidates(part.num_slots,
                                   default_cap(part.num_slots, hist),
-                                  dense_frontier=dense))
+                                  dense_frontier=dense,
+                                  monotone=program.monotone))
     if default_plan in cands:
         default_i = cands.index(default_plan)
     else:

@@ -7,8 +7,8 @@ combinations are WELL-FORMED for a given scenario, the evaluator
 are exactly the plan's fields:
 
   frontier strategy x capacity multiplier x degree-bucket bounds
-  x exchange phase shape (sync | pipelined) x kernel stage
-  (XLA | Pallas +- dynamic table)
+  x exchange phase shape (sync | pipelined | async x staleness) x kernel
+  stage (XLA | Pallas +- dynamic table)
 
 Validity pruning keeps the enumeration honest instead of large:
 
@@ -20,9 +20,12 @@ Validity pruning keeps the enumeration honest instead of large:
     space — the bucketed caps derived from it then respect `num_slots`
     per bucket via `frontier.bucket_caps`) and deduplicated after
     clamping;
-  * `pipelined` phases require split edge tiles (the distributed
-    pipelined backend's static ingress split) — pruned entirely for
-    single-shard scenarios;
+  * `pipelined`/`async` phases require split edge tiles (the distributed
+    backends' static ingress split) — pruned entirely for single-shard
+    scenarios; `async` additionally requires a MONOTONE program
+    (`VertexProgram.monotone` — ⊕=min/max halting traversals), so sync
+    stays the only measured phase for sum-monoid programs and a tuned
+    plan can never hand them bounded staleness;
   * `KernelPlan(use_pallas=False, dynamic_table=False)` is pruned: the
     dynamic-table bit only exists on the Pallas route.
 """
@@ -51,11 +54,15 @@ class PlanSearchSpace:
     cap_multipliers: Tuple[float, ...] = (0.5, 1.0, 2.0, 4.0)
     bucket_bounds: Tuple[Optional[tuple], ...] = DEFAULT_BOUND_CHOICES
     phases: Tuple[str, ...] = ("sync",)
+    # Async ring depths measured when the "async" phase shape survives
+    # pruning (split tiles present AND the program is monotone).
+    staleness_choices: Tuple[int, ...] = (2, 4)
     kernels: Tuple[KernelPlan, ...] = (KernelPlan(use_pallas=False),)
 
     def candidates(self, num_slots: int, base_cap: int,
                    dense_frontier: bool = False,
-                   has_split_tiles: bool = False
+                   has_split_tiles: bool = False,
+                   monotone: bool = False
                    ) -> Tuple[SuperstepPlan, ...]:
         """Enumerate valid `SuperstepPlan`s for one scenario.
 
@@ -63,8 +70,10 @@ class PlanSearchSpace:
         `frontier.default_cap` over the probe histogram); `num_slots`
         clamps it.  `dense_frontier` marks iterative programs — their
         engines never compact, so only the dense strategy survives.
-        `has_split_tiles` gates the pipelined phase shape (requires the
-        distributed ingress edge split)."""
+        `has_split_tiles` gates the pipelined/async phase shapes (both
+        require the distributed ingress edge split); `monotone`
+        additionally gates async (bounded staleness preserves only
+        min/max fixed points — see `VertexProgram.monotone`)."""
         caps = []
         for m in self.cap_multipliers:
             c = min(num_slots, _round8(m * base_cap))
@@ -72,11 +81,17 @@ class PlanSearchSpace:
                 caps.append(c)
         kernels = [k for k in self.kernels
                    if k.use_pallas or k.dynamic_table]  # prune no-op combo
-        phases = [p for p in self.phases
-                  if p == "sync" or has_split_tiles]
+        phases = []           # (phase, staleness) pairs after pruning
+        for p in self.phases:
+            if p == "sync":
+                phases.append((p, 0))
+            elif p == "pipelined" and has_split_tiles:
+                phases.append((p, 0))
+            elif p == "async" and has_split_tiles and monotone:
+                phases.extend((p, st) for st in self.staleness_choices)
         strategies = (("dense",) if dense_frontier else self.strategies)
         out, seen = [], set()
-        for phase in phases:
+        for phase, staleness in phases:
             for kernel in kernels:
                 for strategy in strategies:
                     if strategy == "dense":
@@ -94,6 +109,7 @@ class PlanSearchSpace:
                         plan = SuperstepPlan(
                             strategy=strategy, frontier_cap=cap,
                             dense_frontier=dense_frontier, phases=phase,
+                            staleness=staleness,
                             kernel=kernel, bucket_bounds=bounds)
                         if plan not in seen:
                             seen.add(plan)

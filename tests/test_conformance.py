@@ -64,12 +64,20 @@ def _single_shard(program, part, source=None, frontier="dense", cap=None,
     return np.asarray(out.vertex_data)
 
 
-def _pipelined(program, g, source=None, max_steps=300, **kw):
+def _dist_k1(program, g, exchange="pipelined", source=None, max_steps=300,
+             **kw):
+    """One of the distributed exchanges on a 1-device mesh (degenerate
+    collectives, real phase shape — including the async staleness ring)."""
     ag = build_agent_graph(g, greedy_partition(g, 1, batch_size=64), 1)
     mesh = jax.make_mesh((1,), ("graph",))
-    eng = DistGREEngine(program, mesh, ("graph",), exchange="pipelined", **kw)
+    eng = DistGREEngine(program, mesh, ("graph",), exchange=exchange, **kw)
     out, _ = eng.run(ag, source=source, max_steps=max_steps)
     return out
+
+
+def _pipelined(program, g, source=None, max_steps=300, **kw):
+    return _dist_k1(program, g, exchange="pipelined", source=source,
+                    max_steps=max_steps, **kw)
 
 
 def _fix(x):
@@ -148,6 +156,75 @@ def test_null_backend_pallas_matrix(strategy, dynamic):
 @pytest.mark.parametrize("strategy", ("dense", "compact", "auto"))
 def test_pipelined_k1_strategy_matrix(strategy):
     _check_pipelined_k1("rmat", 7, 8, 5, 0, strategy)
+
+
+# {agent, pipelined, async-k2, async-k4} rows of the backend matrix: the
+# async rows drive the bounded-staleness ring (refresh collective every k
+# supersteps, k-deep remote-partial ring, in-flight slots counted by the
+# termination predicate) and must land on the SAME fixed point — values,
+# not trajectories.
+K1_BACKENDS = [("agent", {}), ("pipelined", {}),
+               ("async", {"staleness": 2}), ("async", {"staleness": 4})]
+K1_IDS = ["agent", "pipelined", "async-k2", "async-k4"]
+
+
+@pytest.mark.parametrize("strategy", ("dense", "compact", "auto"))
+@pytest.mark.parametrize("backend,opts", K1_BACKENDS, ids=K1_IDS)
+def test_backend_k1_strategy_matrix(backend, opts, strategy):
+    g = _graph("rmat", 7, 8, 5)
+    part = DevicePartition.from_graph(g)
+    for prog in (algorithms.bfs_program(), algorithms.sssp_program()):
+        ref = _single_shard(prog, part, source=0)
+        got = _dist_k1(prog, g, exchange=backend, source=0,
+                       frontier=strategy, frontier_cap=64, **opts)
+        np.testing.assert_array_equal(_fix(got), _fix(ref))
+
+
+@pytest.mark.parametrize("backend,opts", K1_BACKENDS, ids=K1_IDS)
+def test_backend_k1_cc(backend, opts):
+    """CC (every vertex initially active, undirected) across the same
+    backend rows — the all-slots-live stress for the async ring fold."""
+    g = rmat_edges(scale=6, edge_factor=4, seed=5).dedup().as_undirected()
+    part = DevicePartition.from_graph(g)
+    ref = _single_shard(algorithms.cc_program(), part)
+    got = _dist_k1(algorithms.cc_program(), g, exchange=backend,
+                   frontier="auto", frontier_cap=64, **opts)
+    np.testing.assert_array_equal(_fix(got), _fix(ref))
+
+
+def test_async_refuses_sum_monoid_programs():
+    """Bounded staleness is only sound for idempotent min/max fixed points
+    (`VertexProgram.monotone`): a sum-monoid program would double-count
+    every re-delivered partial.  All three ingress points must refuse
+    loudly — constructor, adopt_plan, and the tuner's candidate axis is
+    pruned (covered in test_tuning)."""
+    from repro.core.plan import SuperstepPlan
+    mesh = jax.make_mesh((1,), ("graph",))
+    pr = algorithms.pagerank_program()
+    with pytest.raises(ValueError, match="monotone"):
+        DistGREEngine(pr, mesh, ("graph",), exchange="async", staleness=2)
+    ppr = algorithms.ppr_push_program(2)
+    with pytest.raises(ValueError, match="monotone"):
+        DistGREEngine(ppr, mesh, ("graph",), exchange="async", staleness=2)
+    eng = DistGREEngine(pr, mesh, ("graph",), exchange="agent")
+    with pytest.raises(ValueError, match="monotone"):
+        eng.adopt_plan(SuperstepPlan(phases="async", staleness=2))
+
+
+def test_async_staleness_validation():
+    """exchange='async' needs a ring depth >= 1; the serving tick cannot
+    run async at all (un-flushed ring partials would be dropped across
+    ticks)."""
+    mesh = jax.make_mesh((1,), ("graph",))
+    bfs = algorithms.bfs_program()
+    with pytest.raises(ValueError, match="staleness"):
+        DistGREEngine(bfs, mesh, ("graph",), exchange="async", staleness=0)
+    g = _graph("rmat", 6, 4, 3)
+    ag = build_agent_graph(g, greedy_partition(g, 1, batch_size=64), 1)
+    eng = DistGREEngine(bfs, mesh, ("graph",), exchange="async", staleness=2)
+    eng.device_topology(ag)
+    with pytest.raises(ValueError, match="serving"):
+        eng.make_superstep(ag)
 
 
 def test_pipelined_k1_pallas():
@@ -249,15 +326,25 @@ def _mutation_delta(g, seed, frac=0.08, undirected=False):
         rem_d = np.concatenate([dst[pick], src[pick]])
         u = rng.integers(0, n, size=m)
         v = (u + 1 + rng.integers(0, n - 1, size=m)) % n   # never u == v
+        # dedup by unordered pair: the symmetric concat below would turn a
+        # repeated {u, v} into in-batch duplicate rows, which ingress rejects
+        lo, hi = np.minimum(u, v), np.maximum(u, v)
+        _, first = np.unique(lo.astype(np.int64) * n + hi, return_index=True)
+        keep = np.sort(first)
+        u, v = u[keep], v[keep]
         add_s, add_d = np.concatenate([u, v]), np.concatenate([v, u])
-        m_prop = m
+        m_prop = keep.size
     else:
         m = max(1, int(g.num_edges * frac))
         pick = rng.choice(g.num_edges, size=m, replace=False)
         rem_s, rem_d = src[pick], dst[pick]
         add_s = rng.integers(0, n, size=m)
         add_d = rng.integers(0, n, size=m)
-        m_prop = m
+        _, first = np.unique(add_s.astype(np.int64) * n + add_d,
+                             return_index=True)
+        keep = np.sort(first)
+        add_s, add_d = add_s[keep], add_d[keep]
+        m_prop = keep.size
     props = {}
     for key in g.edge_props:
         w = rng.integers(1, 100, size=m_prop).astype(np.float32)
@@ -380,10 +467,30 @@ def test_superstep_plan_json_round_trip():
                       phases="pipelined",
                       kernel=KernelPlan(use_pallas=True,
                                         dynamic_table=False)),
+        SuperstepPlan(phases="async", staleness=2),
+        SuperstepPlan(strategy="compact", frontier_cap=64,
+                      phases="async", staleness=4),
     ]
     for plan in plans:
         wire = json.loads(json.dumps(plan.to_json()))
         assert SuperstepPlan.from_json(wire) == plan, plan
+
+
+def test_superstep_plan_staleness_validation():
+    """`staleness` is the async ring depth: phases='async' needs >= 1,
+    every other phase shape must carry 0 — a cached plan can't smuggle a
+    stale ring depth into a sync engine."""
+    from repro.core.plan import SuperstepPlan
+    with pytest.raises(ValueError, match="staleness"):
+        SuperstepPlan(phases="async", staleness=0)
+    with pytest.raises(ValueError, match="staleness"):
+        SuperstepPlan(phases="sync", staleness=2)
+    with pytest.raises(ValueError, match="staleness"):
+        SuperstepPlan(phases="pipelined", staleness=2)
+    good = SuperstepPlan(phases="async", staleness=3).to_json()
+    assert good["staleness"] == 3
+    from_wire = SuperstepPlan.from_json(good)
+    assert from_wire.staleness == 3 and from_wire.phases == "async"
 
 
 def test_superstep_plan_json_rejects_unknown_fields():
@@ -559,6 +666,21 @@ for backend in ("agent", "pipelined"):
     if not np.array_equal(fix(got), fix(ss_ref)):
         failures.append(f"rmat sssp {backend}/compact/pallas-dynamic")
 
+# Async rows: bounded-staleness ring over REAL 8-shard crossings — the
+# refresh collective fires every k supersteps, remote partials ride the
+# k-deep ring, and the fixed point must still land bitwise on the sync
+# reference (supersteps inflate ~k-fold per shard crossing; raise the
+# step budget accordingly).
+for st, strategy in ((2, "auto"), (2, "dense"), (4, "auto")):
+    got = dist(algorithms.sssp_program(), ag, "async", strategy, source=0,
+               staleness=st, max_steps=1200)
+    if not np.array_equal(fix(got), fix(ss_ref)):
+        failures.append(f"rmat sssp async-k{st}/{strategy}")
+got = dist(ms_prog, ag, "async", "auto", source=MULTI, staleness=2,
+           max_steps=800)
+if not np.array_equal(fix(got), fix(ms_ref)):
+    failures.append("rmat bfs-multi async-k2/auto")
+
 # Circulant sub-matrix: the uniform-degree regime (single bucket live).
 gc = circulant_graph(1 << 11, degree=8, weights=True, seed=1)
 agc = build_agent_graph(gc, hash_partition(gc, k), k)
@@ -569,6 +691,10 @@ for backend in BACKENDS:
                max_steps=600)
     if not np.array_equal(fix(got), fix(cref)):
         failures.append(f"circulant sssp {backend}/auto")
+got = dist(algorithms.sssp_program(), agc, "async", "auto", source=3,
+           staleness=2, max_steps=2400)
+if not np.array_equal(fix(got), fix(cref)):
+    failures.append("circulant sssp async-k2/auto")
 
 # Mutation row: warm-start re-convergence after an edge delta on the REAL
 # 8-shard mesh (the hash partition's tight pads exercise the compaction
@@ -578,10 +704,17 @@ from repro.graph.structures import EdgeDelta
 rng = np.random.default_rng(21)
 m = max(1, g.num_edges // 20)
 pick = rng.choice(g.num_edges, size=m, replace=False)
+add_s = rng.integers(0, g.num_vertices, size=m)
+add_d = rng.integers(0, g.num_vertices, size=m)
+# in-batch duplicate (src, dst) rows are rejected by delta ingress
+_, first = np.unique(add_s.astype(np.int64) * g.num_vertices + add_d,
+                     return_index=True)
+keep = np.sort(first)
+add_s, add_d = add_s[keep], add_d[keep]
 delta = EdgeDelta(
-    add_src=rng.integers(0, g.num_vertices, size=m),
-    add_dst=rng.integers(0, g.num_vertices, size=m),
-    add_props={"weight": rng.integers(1, 100, size=m).astype(np.float32)},
+    add_src=add_s, add_dst=add_d,
+    add_props={"weight": rng.integers(1, 100, size=keep.size)
+               .astype(np.float32)},
     rem_src=np.asarray(g.src)[pick], rem_dst=np.asarray(g.dst)[pick])
 cold = reference(algorithms.sssp_program(),
                  DevicePartition.from_graph(g.apply_edge_delta(delta)),

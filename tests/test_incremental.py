@@ -52,11 +52,16 @@ def _random_delta(g, rng):
     n_rem = 0 if mode == 1 else int(rng.integers(1, max(2, g.num_edges // 8)))
     n_rem = min(n_rem, g.num_edges - 1)   # never empty the graph
     pick = rng.choice(g.num_edges, size=n_rem, replace=False)
-    props = {k: rng.integers(1, 100, size=n_add).astype(np.float32)
+    add_s = rng.integers(0, n, size=n_add)
+    add_d = rng.integers(0, n, size=n_add)
+    if n_add:   # in-batch duplicate (src, dst) rows are rejected by ingress
+        _, first = np.unique(add_s.astype(np.int64) * n + add_d,
+                             return_index=True)
+        keep = np.sort(first)
+        add_s, add_d = add_s[keep], add_d[keep]
+    props = {k: rng.integers(1, 100, size=add_s.size).astype(np.float32)
              for k in g.edge_props}
-    return EdgeDelta(add_src=rng.integers(0, n, size=n_add),
-                     add_dst=rng.integers(0, n, size=n_add),
-                     add_props=props,
+    return EdgeDelta(add_src=add_s, add_dst=add_d, add_props=props,
                      rem_src=np.asarray(g.src)[pick],
                      rem_dst=np.asarray(g.dst)[pick])
 
@@ -262,6 +267,122 @@ def test_pagerank_warm_start_converges_close():
                       .vertex_data)
     np.testing.assert_allclose(np.asarray(out.vertex_data), cold,
                                rtol=0, atol=2e-3)
+
+
+# ------------------------------------------------- delta ingress validation
+def _apply_paths(g):
+    """The three delta-ingress surfaces that must agree: the immutable
+    Graph rebuild, the single-shard padded tiles, and the distributed
+    Agent-Graph — each validates the SAME contract up front."""
+    from repro.core.agent_graph import apply_edge_delta as ag_apply
+    from repro.core.agent_graph import build_agent_graph
+    from repro.core.partition import greedy_partition
+    ag = build_agent_graph(g, greedy_partition(g, 2, batch_size=16), 2)
+    return {
+        "graph": lambda d: g.apply_edge_delta(d),
+        "part": lambda d: DevicePartition.from_graph(g).apply_edge_delta(d),
+        "agent": lambda d: ag_apply(ag, d),
+    }
+
+
+@pytest.mark.parametrize("path", ["graph", "part", "agent"])
+def test_delta_rejects_out_of_range_ids(path):
+    """Vertex ids outside [0, V) in ANY of the four id arrays must raise a
+    ValueError naming the offending rows — before any state is touched.
+    (The old ingress only asserted on add ids, and on the padded-tile
+    path an out-of-range REMOVAL id silently matched nothing.)"""
+    g = _graph("rmat", 6, 4, 3)
+    n = g.num_vertices
+    apply = _apply_paths(g)[path]
+    bad_add = EdgeDelta(add_src=[1, n], add_dst=[2, 3],
+                        add_props={"weight": [1.0, 1.0]})
+    with pytest.raises(ValueError, match=r"add_src.*out-of-range.*rows"
+                                         r".*\[1\]"):
+        apply(bad_add)
+    neg = EdgeDelta(add_src=[1], add_dst=[-2],
+                    add_props={"weight": [1.0]})
+    with pytest.raises(ValueError, match="add_dst.*out-of-range"):
+        apply(neg)
+    bad_rem = EdgeDelta(rem_src=[int(g.src[0])], rem_dst=[n + 7])
+    with pytest.raises(ValueError, match="rem_dst.*out-of-range"):
+        apply(bad_rem)
+
+
+@pytest.mark.parametrize("path", ["graph", "part", "agent"])
+def test_delta_rejects_duplicate_add_rows(path):
+    """The same (src, dst) pair twice in ONE batch is ambiguous (which
+    row's props win?) and must be rejected with the duplicate rows named.
+    Multi-edges built across SEPARATE batches stay legal."""
+    g = _graph("rmat", 6, 4, 3)
+    apply = _apply_paths(g)[path]
+    dup = EdgeDelta(add_src=[4, 5, 4], add_dst=[9, 9, 9],
+                    add_props={"weight": [1.0, 2.0, 3.0]})
+    with pytest.raises(ValueError, match=r"repeats.*rows.*\[2\]"):
+        apply(dup)
+
+
+def test_delta_multi_edge_across_batches_still_legal():
+    """Positive control for the duplicate check: applying the SAME add
+    batch twice builds a legal multi-edge — only in-batch repeats raise."""
+    g = _graph("rmat", 6, 4, 3)
+    one = EdgeDelta(add_src=[4], add_dst=[9], add_props={"weight": [1.0]})
+    g2 = g.apply_edge_delta(one).apply_edge_delta(one)
+    assert g2.num_edges == g.num_edges + 2
+    part = DevicePartition.from_graph(g, edge_slack=8)
+    p2, _ = part.apply_edge_delta(one)
+    p3, _ = p2.apply_edge_delta(one)
+    assert int(np.asarray(p3.edge_mask).sum()) == g.num_edges + 2
+
+
+@pytest.mark.parametrize("path", ["graph", "part", "agent"])
+def test_delta_rejects_removal_of_dead_edge(path):
+    """A removal row matching no live edge (never present, or already
+    tombstoned by an earlier batch) must raise with the rows and pairs
+    named — silently matching nothing desynchronizes replicas that DID
+    hold the edge."""
+    g = _graph("rmat", 6, 4, 3)
+    apply = _apply_paths(g)[path]
+    live = set(zip(np.asarray(g.src).tolist(), np.asarray(g.dst).tolist()))
+    s, d = next((a, b) for a in range(g.num_vertices)
+                for b in range(g.num_vertices) if (a, b) not in live)
+    ghost = EdgeDelta(rem_src=[int(g.src[0]), s],
+                      rem_dst=[int(g.dst[0]), d])
+    with pytest.raises(ValueError, match=r"rows \[1\] match no live edge"):
+        apply(ghost)
+
+
+def test_delta_validation_identical_across_paths():
+    """The distributed path must reject exactly what the single-shard
+    path rejects, with the SAME message — divergent validation is how
+    shards drift."""
+    g = _graph("rmat", 6, 4, 3)
+    paths = _apply_paths(g)
+    n = g.num_vertices
+    deltas = [
+        EdgeDelta(add_src=[1, n + 3], add_dst=[2, 3],
+                  add_props={"weight": [1.0, 1.0]}),
+        EdgeDelta(add_src=[4, 4], add_dst=[9, 9],
+                  add_props={"weight": [1.0, 2.0]}),
+    ]
+    for delta in deltas:
+        msgs = set()
+        for name, apply in paths.items():
+            with pytest.raises(ValueError) as ei:
+                apply(delta)
+            msgs.add(str(ei.value))
+        assert len(msgs) == 1, msgs
+
+
+def test_delta_already_tombstoned_edge_rejected_on_second_removal():
+    """Padded-tile sequence: removing an edge, then removing it again in a
+    later batch, must fail the second time (it is no longer live)."""
+    g = _graph("rmat", 6, 4, 3)
+    part = DevicePartition.from_graph(g)
+    rem = EdgeDelta(rem_src=[int(g.src[0])], rem_dst=[int(g.dst[0])])
+    p2, rep = part.apply_edge_delta(rem)
+    assert rep.num_removed >= 1
+    with pytest.raises(ValueError, match="no live edge"):
+        p2.apply_edge_delta(rem)
 
 
 # ------------------------------------------------------- hypothesis sweep

@@ -5,7 +5,8 @@ import pytest
 from repro.core.agent_graph import build_agent_graph
 from repro.core.partition import (assign_owners, greedy_partition,
                                   hash_edge_cut, hash_partition,
-                                  partition_quality)
+                                  merge_loader_states, partition_quality,
+                                  rebalance_owners)
 from repro.graph.generators import rmat_edges
 
 
@@ -91,6 +92,95 @@ def test_owner_assignment_covers_all(graph):
     owner = assign_owners(graph, part, 4)
     assert owner.shape == (graph.num_vertices,)
     assert owner.min() >= 0 and owner.max() < 4
+
+
+def test_rebalance_all_at_cap_is_a_noop():
+    """Adversarial exactly-at-capacity input (every partition holds exactly
+    `cap` masters): nothing to move, nothing to receive — must return the
+    input unchanged instead of crashing on an empty receiver list."""
+    k, cap = 4, 8
+    owner = np.repeat(np.arange(k, dtype=np.int32), cap)
+    out = rebalance_owners(owner, k, cap)
+    np.testing.assert_array_equal(out, owner)
+
+
+def test_rebalance_drains_receivers_to_exact_capacity():
+    """v == k*cap with ALL vertices piled on partition 0: the receiver list
+    drains to empty exactly as the last overflow vertex lands — the
+    boundary the old code crashed on (`min([])`) whenever the final move
+    filled the last under-cap partition."""
+    k, cap = 4, 8
+    owner = np.zeros(k * cap, dtype=np.int32)
+    out = rebalance_owners(owner, k, cap)
+    counts = np.bincount(out, minlength=k)
+    np.testing.assert_array_equal(counts, np.full(k, cap))
+
+
+def test_rebalance_respects_cap_and_keeps_settled():
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        k = int(rng.integers(1, 8))
+        v = int(rng.integers(1, 120))
+        cap = -(-v // k) + int(rng.integers(0, 3))
+        owner = rng.integers(0, k, size=v).astype(np.int32)
+        out = rebalance_owners(owner, k, cap)
+        counts = np.bincount(out, minlength=k)
+        assert counts.max(initial=0) <= cap
+        assert counts.sum() == v
+        orig = np.bincount(owner, minlength=k)
+        for i in range(k):
+            if orig[i] <= cap:       # moves only shed overflow
+                assert np.all(out[owner == i] == i)
+
+
+def test_rebalance_rejects_infeasible():
+    with pytest.raises(ValueError, match="cannot rebalance"):
+        rebalance_owners(np.zeros(9, np.int32), 2, 4)
+
+
+def test_assign_owners_ties_break_lowest():
+    """Two partitions with equal incident-edge counts for a vertex: the
+    lowest partition id wins, deterministically."""
+    from repro.graph.structures import Graph
+    # vertex 2 has one edge on partition 1 and one on partition 0 -> tie
+    g = Graph(4, np.array([0, 3]), np.array([2, 2]))
+    owner = assign_owners(g, np.array([1, 0], dtype=np.int32), 2)
+    assert owner[2] == 0
+    # ... regardless of which stream position carries which partition
+    owner = assign_owners(g, np.array([0, 1], dtype=np.int32), 2)
+    assert owner[2] == 0
+
+
+def test_coordinated_merge_recovers_global_edge_count():
+    """After every coordinated sync, each loader's load vector must sum to
+    the TOTAL edges placed across all loaders — the balance term of Eq. 8
+    sees the true global Ne (the old `sum // num_loaders` merge shrank it
+    L-fold, compressing the (Max - Ne) spread against edge affinity)."""
+    rng = np.random.default_rng(3)
+    k, loaders, V = 4, 3, 16
+    states = [dict(has_src=np.zeros((k, V), dtype=bool),
+                   has_dst=np.zeros((k, V), dtype=bool),
+                   ne=np.zeros(k, dtype=np.int64)) for _ in range(loaders)]
+    merged = np.zeros(k, dtype=np.int64)
+    total = 0
+    for _ in range(5):
+        for s in states:
+            batch = int(rng.integers(1, 9))
+            np.add.at(s["ne"], rng.integers(0, k, size=batch), 1)
+            total += batch
+        merged = merge_loader_states(states, merged, loaders)
+        assert int(merged.sum()) == total
+        for s in states:
+            assert int(s["ne"].sum()) == total
+
+
+def test_coordinated_mode_end_to_end(graph):
+    part = greedy_partition(graph, 4, batch_size=64, seed=1,
+                            num_loaders=3, sync_every=1)
+    assert part.shape == (graph.num_edges,)
+    assert part.min() >= 0 and part.max() < 4
+    q = partition_quality(graph, part)
+    assert q.agent_comm <= q.vertexcut_comm
 
 
 def test_tile_scan_factors_show_bucketing_viability():

@@ -7,7 +7,8 @@ from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.core.partition import greedy_partition, partition_quality
+from repro.core.partition import (assign_owners, greedy_partition,
+                                  partition_quality, rebalance_owners)
 from repro.core.vertex_program import MONOIDS, segment_combine
 from repro.graph.generators import erdos_renyi_edges
 from repro.optim import compression
@@ -65,9 +66,111 @@ def test_partition_invariants(n, m, k, seed):
     assert q.num_scatters + q.num_combiners == q.agent_comm
 
 
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(16, 100), m=st.integers(16, 256), seed=st.integers(0, 99))
-def test_agent_graph_runs_any_graph(n, m, seed):
+@settings(max_examples=30, deadline=None)
+@given(v=st.integers(1, 200), k=st.integers(1, 8), slack=st.integers(0, 3),
+       seed=st.integers(0, 999))
+def test_rebalance_owners_respects_cap(v, k, slack, seed):
+    """Placement invariant: any feasible owner vector rebalances to at most
+    `cap` masters per partition with every vertex still owned — including
+    the adversarial exactly-at-capacity case (v == k * cap), where the
+    receiver list drains to empty and the old code crashed on `min([])`."""
+    cap = -(-v // k) + slack          # k * cap >= v: always feasible
+    rng = np.random.default_rng(seed)
+    owner = rng.integers(0, k, size=v).astype(np.int32)
+    out = rebalance_owners(owner, k, cap)
+    counts = np.bincount(out, minlength=k)
+    assert counts.max(initial=0) <= cap
+    assert counts.sum() == v
+    assert out.min(initial=0) >= 0 and out.max(initial=0) < k
+    # untouched partitions keep their assignment (moves only shed overflow)
+    orig = np.bincount(owner, minlength=k)
+    for i in range(k):
+        if orig[i] <= cap:
+            assert np.all(out[owner == i] == i)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 8), cap=st.integers(1, 32), extra=st.integers(1, 16),
+       seed=st.integers(0, 99))
+def test_rebalance_owners_rejects_infeasible(k, cap, extra, seed):
+    """More vertices than k*cap total slots must raise a clear ValueError
+    up front, not crash mid-move with an exhausted receiver list."""
+    rng = np.random.default_rng(seed)
+    owner = rng.integers(0, k, size=k * cap + extra).astype(np.int32)
+    with pytest.raises(ValueError, match="cannot rebalance"):
+        rebalance_owners(owner, k, cap)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 64), m=st.integers(4, 128),
+       k=st.sampled_from([2, 4]), seed=st.integers(0, 999))
+def test_assign_owners_ties_break_lowest(n, m, k, seed):
+    """Master placement determinism: the owner is the partition with the
+    most incident edges, and an exact tie goes to the LOWEST partition id
+    (argmax-first semantics) — reorderings of equally-good partitions must
+    not change the layout a warm-started state depends on."""
+    g = erdos_renyi_edges(n, m, seed=seed).dedup()
+    part = (np.arange(g.num_edges) % k).astype(np.int32)
+    owner = assign_owners(g, part, k)
+    counts = np.zeros((k, n), dtype=np.int64)
+    np.add.at(counts, (part, g.src), 1)
+    np.add.at(counts, (part, g.dst), 1)
+    for v in range(n):
+        if counts[:, v].sum() == 0:
+            assert owner[v] == v % k          # isolated vertices hash
+        else:
+            best = counts[:, v].max()
+            assert owner[v] == int(np.flatnonzero(counts[:, v] == best)[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.sampled_from([2, 4]), loaders=st.sampled_from([2, 3]),
+       rounds=st.integers(1, 4), seed=st.integers(0, 999))
+def test_greedy_coordinated_merge_preserves_edge_count(k, loaders, rounds,
+                                                       seed):
+    """Coordinated-mode state merges must hand every loader the TRUE global
+    per-partition edge count for the balance term: after every sync, each
+    loader's load vector sums to exactly the number of edges placed so far
+    across ALL loaders (the old `sum // num_loaders` shortcut shrank it
+    L-fold, compressing the (Max - Ne) spread Eq. 8 balances with).
+    Drives `merge_loader_states` — the function `greedy_partition`'s
+    coordinated mode calls at each sync point — through several rounds of
+    interleaved placements."""
+    from repro.core.partition import merge_loader_states
+    rng = np.random.default_rng(seed)
+    V = 16
+    states = [dict(has_src=np.zeros((k, V), dtype=bool),
+                   has_dst=np.zeros((k, V), dtype=bool),
+                   ne=np.zeros(k, dtype=np.int64)) for _ in range(loaders)]
+    merged = np.zeros(k, dtype=np.int64)
+    total = 0
+    for _ in range(rounds):
+        for s in states:                       # each loader places a batch
+            batch = int(rng.integers(0, 9))
+            idx = rng.integers(0, k, size=batch)
+            np.add.at(s["ne"], idx, 1)
+            s["has_src"][idx, rng.integers(0, V, size=batch)] = True
+            total += batch
+        merged = merge_loader_states(states, merged, loaders)
+        assert int(merged.sum()) == total
+        for s in states:
+            assert int(s["ne"].sum()) == total
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(32, 96), m=st.integers(64, 256),
+       seed=st.integers(0, 99))
+def test_greedy_coordinated_mode_end_to_end(n, m, seed):
+    """The coordinated loader path produces a valid full placement (every
+    edge assigned, ids in range) — the merge must never lose or duplicate
+    stream positions."""
+    g = erdos_renyi_edges(n, m, seed=seed).dedup()
+    if g.num_edges < 4:
+        return
+    part = greedy_partition(g, 4, batch_size=8, seed=seed,
+                            num_loaders=3, sync_every=1)
+    assert part.shape == (g.num_edges,)
+    assert part.min() >= 0 and part.max() < 4
     """Engine correctness is topology-independent: random graphs, k=2."""
     from repro.core import algorithms
     from repro.core.agent_graph import build_agent_graph

@@ -237,7 +237,7 @@ def test_apply_delta_mid_flight_never_torn(backend, policy):
     g = circulant_graph(n, degree=2, weights=True, seed=0)
     delta = EdgeDelta(add_src=[0, 64], add_dst=[64, 0],
                       add_props={"weight": [1.0, 1.0]},
-                      rem_src=[10, 11], rem_dst=[11, 10])
+                      rem_src=[10, 11], rem_dst=[11, 13])
     g2 = g.apply_edge_delta(delta)
     prog = algorithms.bfs_program(D)
     b = _graph_batcher(backend, prog, g)
@@ -275,7 +275,7 @@ def test_apply_delta_holds_admissions_until_swap():
     g = circulant_graph(n, degree=2, weights=True, seed=0)
     delta = EdgeDelta(add_src=[0, 64], add_dst=[64, 0],
                       add_props={"weight": [1.0, 1.0]},
-                      rem_src=[10, 11], rem_dst=[11, 10])
+                      rem_src=[10, 11], rem_dst=[11, 13])
     g2 = g.apply_edge_delta(delta)
     prog = algorithms.bfs_program(D)
     b = _graph_batcher("null", prog, g)
@@ -327,6 +327,65 @@ def test_recycled_lane_after_delta_bitwise(backend, rmat):
         fresh.submit(q.source)
         (ref,) = fresh.run()
         assert np.array_equal(_fix(ref.result), _fix(q.result)), q.uid
+
+
+def test_percentile_matches_numpy_linear():
+    """SLO metric regression: `_percentile` must agree with numpy's default
+    linear-interpolation method at every batch size.  The nearest-rank
+    shortcut it replaces rounded `q*(n-1)` to an index, so p95 over a
+    20-sample window collapsed to the max and p50 over an even-length
+    window picked one of the two middle samples instead of their mean."""
+    from repro.serving.graph_scheduler import _percentile
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 19, 20, 100):
+        vals = sorted(rng.normal(size=n).tolist())
+        for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+            want = float(np.percentile(vals, q * 100.0, method="linear"))
+            got = _percentile(vals, q)
+            assert got == pytest.approx(want, rel=1e-12, abs=1e-12), (n, q)
+
+
+def test_sum_monoid_serving_clamps_tuned_compact_plan(rmat, tmp_path):
+    """Regression for the auto-tuned-plan / PPR-serving interaction: a plan
+    tuned on a sparse-frontier scenario (where frontier compaction wins)
+    can land on a sum-monoid serving engine via a `plan="auto-tuned"`
+    cache hit or an explicit `adopt_plan`.  Compaction reorders the fp
+    segment reduction by frontier occupancy — which depends on the OTHER
+    queries sharing the batch — silently breaking recycled-lane bitwise
+    equality.  The batcher must clamp such engines back to the dense
+    frontier before any tick traces."""
+    from repro.tuning import ProbeEvaluator, SMOKE_SPACE, tune
+
+    class SparseWins(ProbeEvaluator):
+        """Deterministic cost (no clocks): dense heavily penalized, so the
+        tuner stores a compacted winner — the sparse-frontier scenario."""
+
+        def evaluate(self, plan, probe_steps=2, iters=1):
+            if plan.strategy == "dense":
+                return 1e6
+            return 1000.0 + float(plan.frontier_cap or 10 ** 5)
+
+    scen_prog = algorithms.bfs_program()
+    scen = circulant_graph(1 << 9, degree=8)
+    res = tune(scen_prog, scen, cache=tmp_path / "plans.json",
+               space=SMOKE_SPACE, evaluator=SparseWins(scen_prog, scen))
+    assert res.plan.strategy != "dense" and not res.plan.dense_frontier
+
+    prog = algorithms.ppr_push_program(D)
+    eng = GREEngine(prog, plan=res.plan)   # what an auto-tuned hit adopts
+    b = GraphQueryBatcher(eng, DevicePartition.from_graph(rmat))
+    # the batcher clamped the compacted plan back to the dense frontier
+    assert eng.frontier == "dense" and not eng.dense_frontier
+    sources = [0, 3, 17, 42, 99, 8]
+    for s in sources:
+        b.submit(s)
+    done = b.run()
+    assert [q.status for q in done] == ["done"] * len(sources)
+    for q in done:
+        fresh = _graph_batcher("null", prog, rmat, frontier="dense")
+        fresh.submit(q.source)
+        (ref,) = fresh.run()
+        assert np.array_equal(ref.result, q.result), q.uid
 
 
 def test_metrics_and_frontend(rmat):

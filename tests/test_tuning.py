@@ -101,6 +101,28 @@ def test_space_dense_frontier_forces_dense_strategy():
     assert all(p.dense_frontier for p in cands)
 
 
+def test_space_async_axis_requires_split_tiles_and_monotone():
+    """The staleness axis: async candidates appear once per ring depth in
+    `staleness_choices`, and ONLY when the scenario has split edge tiles
+    AND a monotone program — bounded staleness corrupts sum-monoid fixed
+    points, so the tuner must never even probe them."""
+    space = PlanSearchSpace(phases=("sync", "pipelined", "async"),
+                            staleness_choices=(2, 4))
+    both = space.candidates(num_slots=4096, base_cap=64,
+                            has_split_tiles=True, monotone=True)
+    depths = {p.staleness for p in both if p.phases == "async"}
+    assert depths == {2, 4}
+    assert all(p.staleness == 0 for p in both if p.phases != "async")
+    # sum-monoid scenario: the async axis vanishes, pipelined survives
+    non_mono = space.candidates(num_slots=4096, base_cap=64,
+                                has_split_tiles=True, monotone=False)
+    assert any(p.phases == "pipelined" for p in non_mono)
+    assert all(p.phases != "async" for p in non_mono)
+    # single-shard scenario: no split tiles, no async (nor pipelined)
+    solo = space.candidates(num_slots=4096, base_cap=64, monotone=True)
+    assert all(p.phases == "sync" for p in solo)
+
+
 def test_space_prunes_noop_kernel():
     """KernelPlan(False, False) is not a real route (the dynamic-table
     bit only exists on the Pallas path)."""
