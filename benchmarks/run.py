@@ -63,6 +63,12 @@ SMOKE = {
     "incremental": lambda: (bench_incremental.run(scale=10, iters=3),
                             bench_incremental.run_circulant(scale=10,
                                                             iters=3)),
+    # the >= 15% HDRF-vs-greedy remote-dst floor is asserted inside run();
+    # run_dist's exchange-volume reduction is asserted inside run_dist()
+    "partition": lambda: (bench_partition.run(scale=11, ks=(4, 16)),
+                          bench_partition.run_dist(scale=9, k=4, iters=3)),
+    # byte models + chunked==monolithic ingress assert inside run()
+    "memory": lambda: bench_memory.run(scale=11, k=16, chunk_size=1 << 13),
 }
 
 

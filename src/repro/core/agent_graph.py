@@ -28,7 +28,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.partition import assign_owners, rebalance_owners
+from repro.core.partition import (accumulate_owner_counts, assign_owners,
+                                  owners_from_counts, rebalance_owners)
 from repro.graph.structures import (DeltaReport, Graph, csr_layout,
                                     degree_buckets, removal_selector,
                                     validate_edge_delta)
@@ -81,6 +82,12 @@ class AgentGraph:
     bucket_id: np.ndarray = None      # [k, num_slots] int32, -1 = deg 0
     bucket_sizes: tuple = ()
     bucket_max_deg: tuple = ()
+
+    # Name of the partitioner that produced `edge_part` ("" when the
+    # caller handed in a raw placement array).  Folded into the tuned-plan
+    # cache fingerprint (repro.tuning.fingerprint) so plans measured on
+    # one placement never answer for another.
+    partitioner: str = ""
 
     @property
     def num_slots(self) -> int:
@@ -460,7 +467,8 @@ def _rebuild_with_delta(ag: AgentGraph, delta, pad_multiple: int):
     graph = Graph(V, np.concatenate(srcs), np.concatenate(dsts),
                   {name: np.concatenate(v) for name, v in props.items()})
     new_ag = build_agent_graph(graph, np.concatenate(parts), k,
-                               owner=owner, pad_multiple=pad_multiple)
+                               owner=owner, pad_multiple=pad_multiple,
+                               partitioner=ag.partitioner)
     assert np.array_equal(new_ag.old2new, ag.old2new), \
         "compaction must preserve master placement"
     report = DeltaReport(added_src=delta.add_src.copy(),
@@ -471,20 +479,91 @@ def _rebuild_with_delta(ag: AgentGraph, delta, pad_multiple: int):
     return new_ag, report
 
 
-def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
+def _bits_to_ids(row: np.ndarray) -> np.ndarray:
+    """Set-bit positions of one packed uint64 bitset row, ascending."""
+    return np.flatnonzero(np.unpackbits(row.view(np.uint8),
+                                        bitorder="little"))
+
+
+def build_agent_graph(graph, edge_part, k: int,
                       owner: Optional[np.ndarray] = None,
                       pad_multiple: int = 8,
-                      transpose: bool = False) -> AgentGraph:
-    """`transpose=True` builds the agent graph of the REVERSED edge set
+                      transpose: bool = False,
+                      chunk_size: Optional[int] = None,
+                      partitioner: Optional[str] = None) -> AgentGraph:
+    """Chunked two-pass Agent-Graph ingress.
+
+    `graph` is either an in-memory `Graph` or any `EdgeChunkSource`
+    (docs/partitioning.md): the build only ever touches the edge stream
+    through restartable chunk iteration, so per-shard tiles are assembled
+    WITHOUT a second full copy of the edge list — peak host state is the
+    output tiles themselves plus one chunk plus O(V·k/8) packed
+    bookkeeping bitsets (the same bound the streaming partitioners obey).
+    An in-memory `Graph` with `chunk_size=None` streams as one
+    whole-list chunk; any `chunk_size` produces a BITWISE-identical
+    AgentGraph (tests/test_partition_stream.py), because both passes
+    visit edges in stream order and the final per-partition dst sort is
+    stable.
+
+      pass A  per chunk: master-placement incidence counts (when `owner`
+              is None), global out-degrees, per-partition edge counts,
+              and packed (partition, vertex) src/dst touch bitsets — the
+              bounded substitute for the monolithic path's per-partition
+              `np.unique` over materialized relabeled endpoints;
+      pass B  per chunk: translate endpoints to local slots and append to
+              each partition's tile at its cursor (stream order), then
+              stable-sort every tile by destination slot and build the
+              CSR/bucket/exchange metadata.
+
+    `edge_part` may be the usual per-edge placement array or a partitioner
+    NAME (`repro.core.partition_stream.PARTITIONERS`); a name is
+    dispatched through `partition_edges` and recorded on
+    `AgentGraph.partitioner`, which the tuned-plan cache folds into its
+    fingerprint so plans never leak across placements.
+
+    `transpose=True` builds the agent graph of the REVERSED edge set
     (paper §4.2: backward traversal for multi-stage algorithms) while
     keeping the same edge partition and master placement (owners are
     assigned on the FORWARD graph), so forward and backward stages share
     vertex ownership and results relabel identically stage to stage."""
-    if owner is None:
-        owner = assign_owners(graph, edge_part, k)
-    if transpose:
-        graph = graph.reversed()   # same edge indices, endpoints swapped
-    V, E = graph.num_vertices, graph.num_edges
+    from repro.core.partition_stream import bitset_set, partition_edges
+    from repro.graph.structures import as_chunk_source
+
+    if isinstance(edge_part, str):
+        partitioner = edge_part
+        edge_part = partition_edges(graph, k, method=partitioner)
+    if hasattr(graph, "chunks"):
+        source = graph
+    else:
+        source = graph.chunk_source(chunk_size or max(graph.num_edges, 1))
+    V, E = source.num_vertices, source.num_edges
+    edge_part = np.asarray(edge_part)
+    if edge_part.shape[0] != E:
+        raise ValueError(f"edge_part has {edge_part.shape[0]} entries "
+                         f"for a {E}-edge stream")
+
+    # ---- pass A: counts + touch bitsets -------------------------------
+    need_owner = owner is None
+    counts = np.zeros((k, V), dtype=np.int64) if need_owner else None
+    glob_outdeg = np.zeros(V, dtype=np.int64)
+    ne = np.zeros(k, dtype=np.int64)
+    words = (V + 63) >> 6
+    touch_src = np.zeros((k, words), dtype=np.uint64)
+    touch_dst = np.zeros((k, words), dtype=np.uint64)
+    for chunk in source.chunks():
+        ep = edge_part[chunk.offset:chunk.offset + chunk.num_edges]
+        fs, fd = chunk.src, chunk.dst
+        s, d = (fd, fs) if transpose else (fs, fd)
+        if need_owner:
+            accumulate_owner_counts(counts, fs, fd, ep)
+        glob_outdeg += np.bincount(s, minlength=V)
+        ne += np.bincount(ep, minlength=k)
+        bitset_set(touch_src, ep, s)
+        bitset_set(touch_dst, ep, d)
+    if need_owner:
+        owner = owners_from_counts(counts)
+        del counts
+
     cap = -(-V // k)
     cap = -(-cap // pad_multiple) * pad_multiple
     owner = rebalance_owners(owner, k, cap)
@@ -499,24 +578,20 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
     old2new[order] = owner[order] * cap + ranks
     new2old[old2new] = np.arange(V)
 
-    src_g, dst_g = old2new[graph.src], old2new[graph.dst]
-    src_own, dst_own = owner[graph.src], owner[graph.dst]
-    glob_outdeg = graph.out_degree().astype(np.float32)
-
-    per = []  # per-partition dicts
+    # remote-master agent id lists, from the touch bitsets: ascending
+    # relabeled order (old2new of a set, sorted) == the monolithic
+    # `np.unique(s_g[s_rem])`.
+    per = []
     for i in range(k):
-        sel = np.flatnonzero(edge_part == i)
-        s_g, d_g = src_g[sel], dst_g[sel]
-        s_rem = src_own[sel] != i
-        d_rem = dst_own[sel] != i
-        scat_ids = np.unique(s_g[s_rem])         # remote masters we scatter FROM
-        comb_ids = np.unique(d_g[d_rem])         # remote masters we combine FOR
-        per.append(dict(sel=sel, s_g=s_g, d_g=d_g, s_rem=s_rem, d_rem=d_rem,
-                        scat_ids=scat_ids, comb_ids=comb_ids))
+        us = _bits_to_ids(touch_src[i])
+        vs = _bits_to_ids(touch_dst[i])
+        scat_ids = np.sort(old2new[us[owner[us] != i]])  # scatter FROM
+        comb_ids = np.sort(old2new[vs[owner[vs] != i]])  # combine FOR
+        per.append(dict(scat_ids=scat_ids, comb_ids=comb_ids))
 
     s_pad = max(1, max(p["scat_ids"].shape[0] for p in per))
     c_pad = max(1, max(p["comb_ids"].shape[0] for p in per))
-    e_pad = max(1, max(p["sel"].shape[0] for p in per))
+    e_pad = max(1, int(ne.max()))
     s_pad = -(-s_pad // pad_multiple) * pad_multiple
     c_pad = -(-c_pad // pad_multiple) * pad_multiple
     e_pad = -(-e_pad // pad_multiple) * pad_multiple
@@ -525,12 +600,12 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
     src = np.full((k, e_pad), sink, dtype=np.int32)
     dst = np.full((k, e_pad), sink, dtype=np.int32)
     edge_mask = np.zeros((k, e_pad), dtype=bool)
-    eprops = {name: np.zeros((k, e_pad), dtype=v.dtype)
-              for name, v in graph.edge_props.items()}
+    eprops = {name: np.zeros((k, e_pad), dtype=dt)
+              for name, dt in source.prop_dtypes.items()}
     out_degree = np.zeros((k, cap), dtype=np.float32)
     num_scatter = np.zeros(k, dtype=np.int64)
     num_combiner = np.zeros(k, dtype=np.int64)
-    num_edges = np.zeros(k, dtype=np.int64)
+    num_edges = ne.copy()
 
     # per-pair exchange lists
     comb_send = [[[] for _ in range(k)] for _ in range(k)]   # [i][j] combiner slots on i
@@ -538,29 +613,51 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
     scat_send = [[[] for _ in range(k)] for _ in range(k)]   # [j][i] master slots on j
     scat_recv = [[[] for _ in range(k)] for _ in range(k)]   # [i][j] agent slots on i
 
+    # ---- pass B: fill tiles at cursors in stream order ----------------
+    cursor = np.zeros(k, dtype=np.int64)
+    for chunk in source.chunks():
+        ep = edge_part[chunk.offset:chunk.offset + chunk.num_edges]
+        fs, fd = chunk.src, chunk.dst
+        s, d = (fd, fs) if transpose else (fs, fd)
+        s_g, d_g = old2new[s], old2new[d]
+        s_own, d_own = owner[s], owner[d]
+        for i in np.unique(ep):
+            m = ep == i
+            p = per[i]
+            s_loc = np.where(
+                s_own[m] != i,
+                cap + np.searchsorted(p["scat_ids"], s_g[m]),
+                s_g[m] - i * cap)
+            d_loc = np.where(
+                d_own[m] != i,
+                cap + s_pad + np.searchsorted(p["comb_ids"], d_g[m]),
+                d_g[m] - i * cap)
+            lo = int(cursor[i])
+            hi = lo + s_loc.shape[0]
+            src[i, lo:hi] = s_loc
+            dst[i, lo:hi] = d_loc
+            for name in eprops:
+                eprops[name][i, lo:hi] = chunk.props[name][m]
+            cursor[i] = hi
+
     for i, p in enumerate(per):
-        n_e = p["sel"].shape[0]
-        num_edges[i] = n_e
+        n_e = int(ne[i])
         num_scatter[i] = p["scat_ids"].shape[0]
         num_combiner[i] = p["comb_ids"].shape[0]
-        # local slot translation for edge endpoints
-        s_loc = np.where(p["s_rem"],
-                         cap + np.searchsorted(p["scat_ids"], p["s_g"]),
-                         p["s_g"] - i * cap)
-        d_loc = np.where(p["d_rem"],
-                         cap + s_pad + np.searchsorted(p["comb_ids"], p["d_g"]),
-                         p["d_g"] - i * cap)
-        # sort local edges by destination slot (combine key)
-        eorder = np.argsort(d_loc, kind="stable")
-        src[i, :n_e] = s_loc[eorder]
-        dst[i, :n_e] = d_loc[eorder]
+        # sort local edges by destination slot (combine key); the stream
+        # order laid down in pass B is the monolithic selection order, so
+        # the stable permutation — and every downstream array — matches
+        # the single-pass build bit for bit.
+        eorder = np.argsort(dst[i, :n_e], kind="stable")
+        src[i, :n_e] = src[i, :n_e][eorder]
+        dst[i, :n_e] = dst[i, :n_e][eorder]
         edge_mask[i, :n_e] = True
-        for name, v in graph.edge_props.items():
-            eprops[name][i, :n_e] = v[p["sel"]][eorder]
+        for name in eprops:
+            eprops[name][i, :n_e] = eprops[name][i, :n_e][eorder]
         # master aux: global out-degree
         own_old = new2old[i * cap:(i + 1) * cap]
         valid = own_old >= 0
-        out_degree[i, valid] = glob_outdeg[own_old[valid]]
+        out_degree[i, valid] = glob_outdeg[own_old[valid]].astype(np.float32)
         # exchange lists
         for r, g in enumerate(p["comb_ids"]):
             j = int(g // cap)
@@ -619,4 +716,5 @@ def build_agent_graph(graph: Graph, edge_part: np.ndarray, k: int,
         csr_indptr=csr_indptr, csr_eidx=csr_eidx, csr_max_deg=csr_max_deg,
         bucket_id=bucket_id, bucket_sizes=bucket_sizes,
         bucket_max_deg=bucket_max_deg,
+        partitioner=partitioner or "",
     )

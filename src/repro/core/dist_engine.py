@@ -159,8 +159,12 @@ class DistGREEngine:
     def _resolve_auto_plan(self, ag: AgentGraph) -> None:
         """`plan="auto-tuned"` resolution against the persistent cache
         (see `GREEngine._consult_plan_cache`); the key folds in the mesh
-        size and the agent graph's remote-destination edge fraction —
-        the fingerprint facets a single-shard tuning run can't see."""
+        size, the agent graph's remote-destination edge fraction, and the
+        partitioner that produced the placement (`AgentGraph.partitioner`,
+        recorded when `build_agent_graph` is handed a partitioner name) —
+        the fingerprint facets a single-shard tuning run can't see, and
+        the facet that keeps a plan tuned on a greedy placement from
+        answering for an HDRF one."""
         self._auto_plan_pending = False
         from repro.tuning import PlanCache, plan_cache_key
         cache = self._plan_cache

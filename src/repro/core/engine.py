@@ -93,7 +93,7 @@ class DevicePartition:
     def from_graph(graph, pad_to: Optional[int] = None,
                    sort_by_dst: bool = True, transpose: bool = False,
                    bucket_bounds: Optional[tuple] = None,
-                   edge_slack: int = 0):
+                   edge_slack: int = 0, chunk_size: Optional[int] = None):
         """Whole graph on one shard (no agents; slots = V + sink).
 
         `transpose=True` builds the partition of the reversed graph — the
@@ -110,20 +110,60 @@ class DevicePartition:
         slots so future `apply_edge_delta` batches can append in place
         without regrowing the static edge length (= without an XLA
         retrace).  See docs/incremental.md.
+
+        `graph` may also be an `EdgeChunkSource` (or any in-memory Graph
+        with `chunk_size` set): the padded edge columns then fill
+        directly from the chunk stream at a cursor and the dst sort runs
+        in place over the filled prefix — bitwise-identical columns, but
+        peak host state is the padded output columns plus ONE chunk, with
+        no intermediate full edge-list copy (docs/partitioning.md).
         """
         from repro.graph.structures import (DEFAULT_BUCKET_BOUNDS,
                                             csr_layout, degree_buckets,
                                             pad_edges, sort_edges_by_dst)
-        if transpose:
-            graph = graph.reversed()
-        src, dst, props = graph.src, graph.dst, dict(graph.edge_props)
-        if sort_by_dst:
-            src, dst, props, _ = sort_edges_by_dst(src, dst, props)
-        v = graph.num_vertices
-        e_pad = pad_to or (graph.num_edges + edge_slack)
-        psrc, pdst, mask = pad_edges(src, dst, e_pad, pad_vertex=v)
-        props = {k: np.pad(p, (0, e_pad - graph.num_edges)) for k, p in props.items()}
-        out_deg = graph.out_degree().astype(np.float32)
+        source = graph if hasattr(graph, "chunks") else (
+            graph.chunk_source(chunk_size) if chunk_size else None)
+        if source is not None:
+            v, e = source.num_vertices, source.num_edges
+            e_pad = pad_to or (e + edge_slack)
+            assert e_pad >= e, (e_pad, e)
+            psrc = np.full(e_pad, v, dtype=np.int32)
+            pdst = np.full(e_pad, v, dtype=np.int32)
+            mask = np.zeros(e_pad, dtype=bool)
+            mask[:e] = True
+            props = {k: np.zeros(e_pad, dtype=dt)
+                     for k, dt in source.prop_dtypes.items()}
+            out_deg = np.zeros(v, dtype=np.int64)
+            cur = 0
+            for chunk in source.chunks():
+                s, d = ((chunk.dst, chunk.src) if transpose
+                        else (chunk.src, chunk.dst))
+                hi = cur + chunk.num_edges
+                psrc[cur:hi] = s
+                pdst[cur:hi] = d
+                for k in props:
+                    props[k][cur:hi] = chunk.props[k]
+                out_deg += np.bincount(s, minlength=v)
+                cur = hi
+            if sort_by_dst:
+                order = np.argsort(pdst[:e], kind="stable")
+                psrc[:e] = psrc[:e][order]
+                pdst[:e] = pdst[:e][order]
+                for k in props:
+                    props[k][:e] = props[k][:e][order]
+            out_deg = out_deg.astype(np.float32)
+        else:
+            if transpose:
+                graph = graph.reversed()
+            src, dst, props = graph.src, graph.dst, dict(graph.edge_props)
+            if sort_by_dst:
+                src, dst, props, _ = sort_edges_by_dst(src, dst, props)
+            v = graph.num_vertices
+            e_pad = pad_to or (graph.num_edges + edge_slack)
+            psrc, pdst, mask = pad_edges(src, dst, e_pad, pad_vertex=v)
+            props = {k: np.pad(p, (0, e_pad - graph.num_edges))
+                     for k, p in props.items()}
+            out_deg = graph.out_degree().astype(np.float32)
         indptr, eidx, max_deg = csr_layout(psrc, mask, v + 1)
         bucket_id, sizes, max_degs = degree_buckets(
             indptr, v + 1, bounds=tuple(bucket_bounds or

@@ -7,7 +7,12 @@ in the loader.  Implements:
     (u, v) on the partition maximizing src/dst affinity + load balance.
     `batch_size=1` is the exact serial stream (GRE-S); larger batches give
     the parallel-loader approximation (GRE-P / PowerGraph-oblivious, where
-    loaders don't exchange heuristic state mid-stream).
+    loaders don't exchange heuristic state mid-stream).  Loader state is
+    PACKED — the `[k, V]` has_src/has_dst presence booleans live as
+    `[k, ceil(V/64)]` uint64 bitsets (8× smaller; placements bitwise
+    identical, since Eq. 8 only ever reads presence as 0/1).  The
+    degree-aware HDRF alternative with O(V·k/8) state lives in
+    `repro.core.partition_stream`.
   * `hash_partition` — the random-hash baseline (Pregel/GraphLab default).
   * `assign_owners` — master placement (most-incident-edges heuristic) and
     contiguous relabeling so each partition's masters form a dense block
@@ -25,6 +30,23 @@ import numpy as np
 from repro.graph.structures import Graph
 
 DELTA = 1.0  # paper: Δ = 1.0 in Eq. 8
+
+
+def _presence(bits: np.ndarray, cols: np.ndarray) -> np.ndarray:
+    """Read packed presence bits: `bits` is `[k, ceil(V/64)]` uint64,
+    `cols` a batch of vertex ids; returns `[k, b]` float64 0/1 — the f/g
+    terms of Eq. 8, exactly what `.astype(float)` of the old bool rows
+    produced."""
+    return ((bits[:, cols >> 6] >> (cols & 63).astype(np.uint64))
+            & np.uint64(1)).astype(np.float64)
+
+
+def _set_presence(bits: np.ndarray, rows: np.ndarray,
+                  cols: np.ndarray) -> None:
+    """Set presence bit `cols[t]` on partition row `rows[t]` in place
+    (duplicates within the batch OR harmlessly)."""
+    np.bitwise_or.at(bits, (rows, cols >> 6),
+                     np.uint64(1) << (cols & 63).astype(np.uint64))
 
 
 def hash_partition(graph: Graph, k: int, seed: int = 0) -> np.ndarray:
@@ -69,8 +91,9 @@ def greedy_partition(graph: Graph, k: int, batch_size: int = 256,
     # split the edge stream across loaders (contiguous ranges, as when each
     # machine reads its own file chunk)
     bounds = np.linspace(0, E, num_loaders + 1).astype(np.int64)
-    states = [dict(has_src=np.zeros((k, V), dtype=bool),
-                   has_dst=np.zeros((k, V), dtype=bool),
+    words = (V + 63) >> 6      # packed presence: 1 bit per (partition, vertex)
+    states = [dict(has_src=np.zeros((k, words), dtype=np.uint64),
+                   has_dst=np.zeros((k, words), dtype=np.uint64),
                    ne=np.zeros(k, dtype=np.int64)) for _ in range(num_loaders)]
     rngs = [np.random.default_rng(seed + i) for i in range(num_loaders)]
     cursors = [int(bounds[i]) for i in range(num_loaders)]
@@ -92,8 +115,8 @@ def greedy_partition(graph: Graph, k: int, batch_size: int = 256,
             st = states[li]
             u = graph.src[lo:hi]
             v = graph.dst[lo:hi]
-            f = st["has_src"][:, u].astype(np.float64)     # [k, b]
-            g = st["has_dst"][:, v].astype(np.float64)     # [k, b]
+            f = _presence(st["has_src"], u)                # [k, b]
+            g = _presence(st["has_dst"], v)                # [k, b]
             ne = st["ne"]
             mx, mn = ne.max(), ne.min()
             balance = (mx - ne) / (DELTA + mx - mn)        # [k]
@@ -101,8 +124,8 @@ def greedy_partition(graph: Graph, k: int, batch_size: int = 256,
             score += rngs[li].random(score.shape) * 1e-9   # tiebreak
             idx = np.argmax(score, axis=0).astype(np.int32)
             part[lo:hi] = idx
-            st["has_src"][idx, u] = True
-            st["has_dst"][idx, v] = True
+            _set_presence(st["has_src"], idx, u)
+            _set_presence(st["has_dst"], idx, v)
             np.add.at(st["ne"], idx, 1)
             cursors[li] = hi
         n_batch += 1
@@ -116,7 +139,9 @@ def merge_loader_states(states, merged_ne: np.ndarray,
     """Coordinated-mode sync point: merge the loaders' greedy heuristic
     state in place and return the new merged load baseline.
 
-    The OR-merge of has_src/has_dst is idempotent, but the load term must
+    The OR-merge of has_src/has_dst (bitwise on the packed uint64 rows;
+    identical semantics on legacy bool arrays) is idempotent, but the load
+    term must
     recover the TRUE global per-partition edge count: each loader's `ne`
     is the baseline replicated at the previous sync plus its own new
     placements, so summing the copies holds the baseline `num_loaders`
@@ -124,8 +149,8 @@ def merge_loader_states(states, merged_ne: np.ndarray,
     instead shrank the counts L-fold, compressing the balance term's
     (Max - Ne) spread and mis-weighting it against edge affinity.)
     """
-    hs = np.logical_or.reduce([s["has_src"] for s in states])
-    hd = np.logical_or.reduce([s["has_dst"] for s in states])
+    hs = np.bitwise_or.reduce([s["has_src"] for s in states])
+    hd = np.bitwise_or.reduce([s["has_dst"] for s in states])
     ne = (np.sum([s["ne"] for s in states], axis=0)
           - (num_loaders - 1) * merged_ne)
     for s in states:
@@ -134,17 +159,32 @@ def merge_loader_states(states, merged_ne: np.ndarray,
     return ne
 
 
-def assign_owners(graph: Graph, edge_part: np.ndarray, k: int) -> np.ndarray:
-    """Master placement: each vertex is owned by the partition holding most
-    of its incident edges (ties → lowest id); isolated vertices hash."""
-    V = graph.num_vertices
-    counts = np.zeros((k, V), dtype=np.int64)
-    np.add.at(counts, (edge_part, graph.src), 1)
-    np.add.at(counts, (edge_part, graph.dst), 1)
+def accumulate_owner_counts(counts: np.ndarray, src: np.ndarray,
+                            dst: np.ndarray, edge_part: np.ndarray) -> None:
+    """Fold one edge batch into the `[k, V]` incidence counts that master
+    placement argmaxes over — the chunked ingress calls this once per
+    chunk, so streaming and monolithic owners agree exactly."""
+    np.add.at(counts, (edge_part, src), 1)
+    np.add.at(counts, (edge_part, dst), 1)
+
+
+def owners_from_counts(counts: np.ndarray) -> np.ndarray:
+    """Master placement from accumulated incidence counts: each vertex is
+    owned by the partition holding most of its incident edges (ties →
+    lowest id); isolated vertices hash (`v % k`)."""
+    k, V = counts.shape
     owner = np.argmax(counts, axis=0).astype(np.int32)
     isolated = counts.sum(axis=0) == 0
     owner[isolated] = (np.arange(V)[isolated] % k).astype(np.int32)
     return owner
+
+
+def assign_owners(graph: Graph, edge_part: np.ndarray, k: int) -> np.ndarray:
+    """Master placement: each vertex is owned by the partition holding most
+    of its incident edges (ties → lowest id); isolated vertices hash."""
+    counts = np.zeros((k, graph.num_vertices), dtype=np.int64)
+    accumulate_owner_counts(counts, graph.src, graph.dst, edge_part)
+    return owners_from_counts(counts)
 
 
 def rebalance_owners(owner: np.ndarray, k: int, cap: int) -> np.ndarray:
@@ -194,6 +234,9 @@ class PartitionQuality:
     # (exchange="pipelined"; see agent_graph.split_edge_tiles)
     vertexcut_replicas: int        # PowerGraph replicas R for same placement
     vertexcut_cut_factor: float    # 2 * (R - V) / V (paper §7.2)
+    replication_factor: float      # R / V — the streaming-partitioner
+    # objective (HDRF et al. report RF; lower RF = fewer combiner/scatter
+    # agents = less exchange traffic)
     vertexcut_comm: int            # 2 * (R - V) messages per superstep
     agent_comm: int                # |Vs| + |Vc| messages per superstep (§5.1)
     local_max_out_degree: int      # max LOCAL out-degree over partitions —
@@ -217,6 +260,12 @@ class PartitionQuality:
     # per-superstep DYNAMIC table's occupancy at a live frontier is
     # measured by benchmarks/bench_frontier.py.
     block_table_occupancy: float
+    # Peak loader-heuristic state of the partitioner that PRODUCED this
+    # placement, in bytes (0 when unknown — e.g. hash keeps none).  Passed
+    # in by the caller: quality is computed from the placement alone, but
+    # the bound (O(V·k/8) packed bitsets vs the old O(k·V) bools) is part
+    # of the ingress-memory story bench_memory tracks.
+    partitioner_state_bytes: int = 0
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -224,7 +273,8 @@ class PartitionQuality:
 
 def partition_quality(graph: Graph, edge_part: np.ndarray,
                       owner: Optional[np.ndarray] = None,
-                      k: Optional[int] = None) -> PartitionQuality:
+                      k: Optional[int] = None,
+                      partitioner_state_bytes: int = 0) -> PartitionQuality:
     k = k or int(edge_part.max()) + 1
     if owner is None:
         owner = assign_owners(graph, edge_part, k)
@@ -309,6 +359,7 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
             np.mean(owner[graph.dst] != edge_part)) if E else 0.0,
         vertexcut_replicas=replicas,
         vertexcut_cut_factor=2.0 * mirrors / V,
+        replication_factor=replicas / max(V, 1),
         vertexcut_comm=2 * mirrors,
         agent_comm=agents,
         local_max_out_degree=local_max_deg,
@@ -316,4 +367,5 @@ def partition_quality(graph: Graph, edge_part: np.ndarray,
         flat_tile_scan_factor=float(flat_factor),
         bucket_tile_scan_factor=float(bucket_factor),
         block_table_occupancy=float(occupancy),
+        partitioner_state_bytes=int(partitioner_state_bytes),
     )

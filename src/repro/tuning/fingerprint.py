@@ -41,14 +41,24 @@ def _q_log2(x: float) -> int:
 def graph_fingerprint(num_slots: int, num_edges: int,
                       max_out_degree: int = 0,
                       remote_dst_fraction: float = 0.0,
-                      frontier_hist: Optional[Sequence[int]] = None) -> str:
-    """Quantized scenario key for one graph/partition layout."""
+                      frontier_hist: Optional[Sequence[int]] = None,
+                      partitioner: str = "") -> str:
+    """Quantized scenario key for one graph/partition layout.
+
+    `partitioner` names the edge-placement heuristic that built the
+    layout (`AgentGraph.partitioner`; "" for raw placements and
+    single-shard partitions).  Different partitioners reshape the very
+    facets the probes measure — remote fraction, skew, exchange load —
+    so a plan tuned on a greedy placement must not answer for an HDRF
+    one even when both quantize into the same size/skew bins."""
     mean_deg = num_edges / max(num_slots, 1)
     skew = max_out_degree / max(mean_deg, 1e-9) if max_out_degree else 0.0
     parts = [f"v{_q_log2(num_slots)}",
              f"e{_q_log2(num_edges)}",
              f"skew{_q_log2(skew) if skew >= 1.0 else 0}",
              f"rdf{round(remote_dst_fraction / 0.05) * 5}"]
+    if partitioner:
+        parts.append(f"p:{partitioner}")
     if frontier_hist:
         density = max(frontier_hist) / max(num_slots, 1)
         # decade quantization: 1e-3 and 8e-3 frontiers tune alike,
@@ -57,7 +67,8 @@ def graph_fingerprint(num_slots: int, num_edges: int,
     return "-".join(parts)
 
 
-def partition_fingerprint(part, frontier_hist=None) -> str:
+def partition_fingerprint(part, frontier_hist=None,
+                          partitioner: str = "") -> str:
     """Fingerprint of a single-shard `DevicePartition` (uses the LIVE edge
     count — `edge_mask.sum()` — and the CSR max degree as the skew
     numerator).
@@ -80,7 +91,8 @@ def partition_fingerprint(part, frontier_hist=None) -> str:
         num_edges = int(part.src.shape[0])
     return graph_fingerprint(part.num_slots, num_edges,
                              max_out_degree=part.csr_max_deg,
-                             frontier_hist=frontier_hist)
+                             frontier_hist=frontier_hist,
+                             partitioner=partitioner)
 
 
 def agent_graph_fingerprint(ag, frontier_hist=None) -> str:
@@ -98,7 +110,8 @@ def agent_graph_fingerprint(ag, frontier_hist=None) -> str:
     return graph_fingerprint(ag.num_slots, num_edges,
                              max_out_degree=ag.csr_max_deg,
                              remote_dst_fraction=rdf,
-                             frontier_hist=frontier_hist)
+                             frontier_hist=frontier_hist,
+                             partitioner=getattr(ag, "partitioner", ""))
 
 
 def program_fingerprint(program) -> str:
